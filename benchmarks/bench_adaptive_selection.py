@@ -1,0 +1,47 @@
+"""Paper §4.2 (future work there, implemented here): benchmark-driven
+adaptive variant selection. Generates the cpu_xla library twice — once with
+the flag heuristic, once with the BenchSelectGPO — and reports which
+primitives changed implementation and the measured per-variant timings.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import load_library
+
+from .common import emit
+
+
+def run() -> list[str]:
+    lib_flags = load_library("cpu_xla", use_bench_selection=False)
+    lib_bench = load_library("cpu_xla", use_bench_selection=True)
+    man_f = json.loads((Path(lib_flags.__file__).parent / "_manifest.json").read_text())
+    man_b = json.loads((Path(lib_bench.__file__).parent / "_manifest.json").read_text())
+    out = []
+    changed = 0
+    for prim, per_ct in man_b["primitives"].items():
+        for ct, sel in per_ct.items():
+            if sel["selected_by"] == "bench":
+                base = man_f["primitives"][prim][ct]
+                delta = "same" if base["required_flags"] == sel["required_flags"] \
+                    else "CHANGED"
+                if delta == "CHANGED":
+                    changed += 1
+                emit(f"adaptive_{prim}_{ct}", 0,
+                     f"by=bench flags={sel['required_flags']} vs_heuristic={delta}")
+                out.append(f"{prim}/{ct}: bench-selected ({delta})")
+    # timings live in the bench cache
+    cache_dir = Path(lib_bench.__file__).parents[2] / "bench_cache"
+    for f in sorted(cache_dir.glob("cpu_xla_*.json")):
+        cache = json.loads(f.read_text())
+        for key, rec in cache.items():
+            times = ", ".join(f"{t:.0f}us" for t in rec["times_us"])
+            emit(f"adaptive_timings_{key.replace('/', '_')}", 0, times)
+    out.append(f"{changed} selections changed vs flag heuristic")
+    return out
+
+
+if __name__ == "__main__":
+    run()

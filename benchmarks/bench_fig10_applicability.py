@@ -1,0 +1,72 @@
+"""Paper Fig 10: relative runtime of the generated-TSL range-count vs the
+hand-written implementation (paper: generated within [-0.3%, +0.6%] of
+Highway; popcount flavour within [-1%, +1.8%]).
+
+Here both sides trace to XLA, so parity is the expected result — the point is
+that the GENERATED abstraction adds zero runtime overhead, which is the
+paper's claim. 4 GiB of data (paper's size) is scaled to 256 MiB to keep the
+harness fast; the comparison is relative, so size cancels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import load_library
+
+from .common import emit, time_fn
+
+N = 1 << 26        # 64M float32 = 256 MiB
+
+
+def _handwritten(data, lo, hi):
+    m = jnp.logical_and(data >= lo, data <= hi)
+    return jnp.sum(m.astype(jnp.int32))
+
+
+def _handwritten_popcnt(data, lo, hi):
+    flat = data.reshape(-1, 32)
+    m = jnp.logical_and(flat >= lo, flat <= hi)
+    w = jnp.left_shift(jnp.uint32(1), jnp.arange(32, dtype=jnp.uint32))
+    packed = jnp.sum(m.astype(jnp.uint32) * w, axis=-1, dtype=jnp.uint32)
+    return jnp.sum(jax.lax.population_count(packed).astype(jnp.int32))
+
+
+def run() -> list[str]:
+    lib = load_library("cpu_xla")
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.uniform(0, 100_000, N), jnp.float32)
+    lo, hi = 5.0, 15.0
+
+    hand = jax.jit(_handwritten)
+    gen = jax.jit(lambda d: lib.ops.range_count(d, lo, hi))
+    hand_pc = jax.jit(_handwritten_popcnt)
+    gen_pc = jax.jit(lambda d: lib.ops.range_count_popcnt(d, lo, hi))
+
+    assert int(hand(data, lo, hi)) == int(gen(data))
+    assert int(hand_pc(data, lo, hi)) == int(gen_pc(data))
+
+    t_hand = time_fn(hand, data, lo, hi, n_iter=10)
+    t_gen = time_fn(gen, data, n_iter=10)
+    t_hand_pc = time_fn(hand_pc, data, lo, hi, n_iter=10)
+    t_gen_pc = time_fn(gen_pc, data, n_iter=10)
+
+    rel = (t_gen - t_hand) / t_hand * 100
+    rel_pc = (t_gen_pc - t_hand_pc) / t_hand_pc * 100
+    gib_s = (N * 4 / 2**30) / (t_gen / 1e6)
+    out = []
+    emit("fig10_range_count_handwritten", t_hand, f"{gib_s:.1f}GiB/s_ref")
+    emit("fig10_range_count_generated", t_gen,
+         f"relative_delta={rel:+.2f}% (paper: -0.3..+0.6%)")
+    emit("fig10_popcnt_handwritten", t_hand_pc, "")
+    emit("fig10_popcnt_generated", t_gen_pc,
+         f"relative_delta={rel_pc:+.2f}% (paper: -1..+1.8%)")
+    out.append(f"range_count delta {rel:+.2f}%")
+    out.append(f"popcnt delta {rel_pc:+.2f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

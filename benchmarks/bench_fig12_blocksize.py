@@ -1,0 +1,48 @@
+"""Paper Fig 12: throughput of the range-count use case vs vector size
+(paper: FPGA vector sizes 128..2048 bit, 512-bit saturates PCIe at ~12 GiB/s).
+
+TPU adaptation (DESIGN.md §2): "vector size" becomes the Pallas BlockSpec row
+count — the VMEM working-set knob. Two readouts per block size:
+  * CPU wall-clock of the XLA path (real, this host);
+  * the kernel's roofline-model throughput on v5e (bytes/HBM_bw — the kernel
+    is purely memory-bound, so the model is exact up to VMEM pipelining).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.roofline import HBM_BW
+
+from .common import emit, time_fn
+
+N = 1 << 24          # 16M elements = 64 MiB
+BLOCK_ROWS = [8, 32, 128, 512, 2048]
+
+
+def run() -> list[str]:
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.uniform(0, 100, N), jnp.float32)
+    out = []
+    from repro.kernels.range_count import ops, ref
+
+    t_ref = time_fn(jax.jit(lambda d: ref.range_count(d, 5.0, 15.0)), data,
+                    n_iter=10)
+    gib = N * 4 / 2**30
+    emit("fig12_xla_cpu_reference", t_ref, f"{gib / (t_ref/1e6):.2f}GiB/s")
+    for bm in BLOCK_ROWS:
+        # v5e roofline: one HBM pass at 819 GB/s; VMEM tile = bm x 128 x 4B
+        tile_kib = bm * 128 * 4 / 1024
+        t_model = N * 4 / HBM_BW * 1e6
+        eff = min(1.0, tile_kib / 512)   # tiles < 4 sublane-groups underfill the pipeline
+        emit(f"fig12_v5e_model_block{bm}", t_model / eff,
+             f"tile={tile_kib:.0f}KiB eff={eff:.2f} "
+             f"{gib / (t_model / eff / 1e6):.0f}GiB/s")
+        out.append(f"block {bm}: {gib / (t_model / eff / 1e6):.0f} GiB/s (model)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Primitive-level microbenchmarks: generated TSL call vs direct jnp for the
+hot primitives (zero-abstraction-overhead check at the primitive granularity
+— the paper's 'compile-time deduction and code generation with zero overhead
+for the runtime').
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import load_library
+from repro.kernels.flash_attention import ref as fa_ref
+from repro.kernels.rmsnorm import ref as rms_ref
+
+from .common import emit, time_fn
+
+
+def run() -> list[str]:
+    lib = load_library("cpu_xla")
+    rng = np.random.default_rng(0)
+    out = []
+
+    x = jnp.asarray(rng.normal(size=(4096, 1024)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(1024,)), jnp.float32)
+    t_tsl = time_fn(jax.jit(lambda a: lib.ops.rmsnorm(a, w)), x)
+    t_raw = time_fn(jax.jit(lambda a: rms_ref.rmsnorm(a, w)), x)
+    emit("prim_rmsnorm_tsl", t_tsl, f"overhead={(t_tsl-t_raw)/t_raw*100:+.1f}%")
+    emit("prim_rmsnorm_direct", t_raw, "")
+    out.append(f"rmsnorm overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
+
+    q = jnp.asarray(rng.normal(size=(2, 8, 512, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(2, 2, 512, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(2, 2, 512, 64)), jnp.float32)
+    t_tsl = time_fn(jax.jit(lambda a: lib.ops.flash_attention(a, k, v)), q, n_iter=10)
+    t_raw = time_fn(jax.jit(lambda a: fa_ref.attention(a, k, v)), q, n_iter=10)
+    emit("prim_attention_tsl", t_tsl, f"overhead={(t_tsl-t_raw)/t_raw*100:+.1f}%")
+    emit("prim_attention_direct", t_raw, "")
+    out.append(f"attention overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
+
+    a = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
+    b = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
+    t_tsl = time_fn(jax.jit(lambda x_: lib.ops.matmul(x_, b)), a)
+    t_raw = time_fn(jax.jit(lambda x_: jnp.matmul(x_, b)), a)
+    emit("prim_matmul_tsl", t_tsl, f"overhead={(t_tsl-t_raw)/t_raw*100:+.1f}%")
+    emit("prim_matmul_direct", t_raw, "")
+    out.append(f"matmul overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Benchmark utilities: wall-clock timing of jitted callables on the host."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, n_iter: int = 20, warmup: int = 3, **kw) -> float:
+    """Median-of-runs microsecond timing for a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(n_iter):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6      # median, microseconds
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

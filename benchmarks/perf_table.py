@@ -1,0 +1,46 @@
+"""§Perf helper: compare tagged dry-run records (hypothesis→change→measure
+iterations) for the hillclimbed cells."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load(arch: str, shape: str, mesh: str = "16x16", tag: str = "") -> dict | None:
+    suffix = f"_{tag}" if tag else ""
+    f = DRYRUN_DIR / f"{arch}_{shape}_{mesh}{suffix}.json"
+    if not f.exists():
+        return None
+    return json.loads(f.read_text())
+
+
+def compare(arch: str, shape: str, tags: list[str], mesh: str = "16x16") -> str:
+    rows = [f"### {arch} × {shape} ({mesh})",
+            "| iteration | compute | memory(adj) | collective | dominant | "
+            "bound | Δbound vs prev |",
+            "|---|---|---|---|---|---|---|"]
+    prev = None
+    for tag in tags:
+        r = load(arch, shape, mesh, tag)
+        if r is None or r.get("status") != "ok":
+            rows.append(f"| {tag or 'baseline'} | — | — | — | — | missing | — |")
+            continue
+        t = r["roofline"]
+        delta = ""
+        if prev is not None:
+            delta = f"{(t['roofline_bound_s'] - prev) / prev * 100:+.1f}%"
+        rows.append(
+            f"| {tag or 'baseline'} | {t['compute_s']:.4f} | {t['memory_s']:.4f} | "
+            f"{t['collective_s']:.4f} | {t['dominant']} | "
+            f"{t['roofline_bound_s']:.4f}s | {delta} |")
+        prev = t["roofline_bound_s"]
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(compare(sys.argv[1], sys.argv[2], [""] + sys.argv[3:]))

@@ -1,0 +1,81 @@
+"""Render the §Dry-run / §Roofline tables in EXPERIMENTS.md from the JSON
+records written by launch/dryrun.py."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN_DIR = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_records(mesh: str = "16x16", tag: str = "") -> list[dict]:
+    recs = []
+    for f in sorted(DRYRUN_DIR.glob(f"*_{mesh}{('_' + tag) if tag else ''}.json")):
+        r = json.loads(f.read_text())
+        if tag and r.get("tag") != tag:
+            continue
+        if not tag and r.get("tag"):
+            continue
+        recs.append(r)
+    return recs
+
+
+def _fmt_s(x) -> str:
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}m"
+    return f"{x*1e6:.0f}µ"
+
+
+def roofline_table(mesh: str = "16x16", tag: str = "") -> str:
+    rows = ["| arch | shape | status | compute | memory(adj) | collective | "
+            "dominant | MODEL/HLO flops | HBM GiB/dev |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records(mesh, tag):
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | skip ({r['reason'][:36]}…) "
+                        f"| — | — | — | — | — | — |")
+            continue
+        if r["status"] == "failed":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAILED | — | — | — | — | — | — |")
+            continue
+        t = r["roofline"]
+        mem = r.get("memory_analysis", {})
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | {_fmt_s(t['compute_s'])} | "
+            f"{_fmt_s(t['memory_s'])} | {_fmt_s(t['collective_s'])} | "
+            f"**{t['dominant']}** | "
+            f"{(r.get('useful_flops_ratio') or 0):.3f} | "
+            f"{mem.get('total_hbm_gib_per_device', 0):.1f} |")
+    return "\n".join(rows)
+
+
+def summary(mesh: str = "16x16") -> dict:
+    recs = load_records(mesh)
+    ok = [r for r in recs if r["status"] == "ok"]
+    return {
+        "cells": len(recs),
+        "ok": len(ok),
+        "skipped": sum(r["status"] == "skipped" for r in recs),
+        "failed": sum(r["status"] == "failed" for r in recs),
+        "dominant": {d: sum(r["roofline"]["dominant"] == d for r in ok)
+                     for d in ("compute", "memory", "collective")},
+    }
+
+
+def run() -> list[str]:
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        s = summary(mesh)
+        print(f"roofline_{mesh},0,{json.dumps(s)}")
+        out.append(f"{mesh}: {s}")
+    return out
+
+
+if __name__ == "__main__":
+    print(roofline_table("16x16"))
+    run()

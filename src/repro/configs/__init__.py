@@ -1,0 +1,5 @@
+from .arch import ArchConfig
+from .registry import ARCH_IDS, get_config
+from .shapes import SHAPES, ShapeCell, applicable
+
+__all__ = ["ArchConfig", "ARCH_IDS", "get_config", "SHAPES", "ShapeCell", "applicable"]

@@ -1,0 +1,26 @@
+"""internvl2-2b [vlm]: InternViT frontend (STUB) + InternLM2-1.8B backbone.
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553
+[arXiv:2404.16821; hf]
+
+The modality frontend is a stub per the task brief: input_specs() provides
+precomputed patch embeddings (vision_prefix tokens of width d_model) that the
+backbone consumes alongside token embeddings.
+"""
+
+from .arch import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=92553,
+    head_dim=128,
+    vision_prefix=256,            # one ViT tile of patch embeddings
+    rope_theta=1e6,
+    source="arXiv:2404.16821; hf",
+)

@@ -1,0 +1,37 @@
+"""The four assigned input-shape cells (task brief) + applicability rules."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from .arch import ArchConfig
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ArchConfig, cell: ShapeCell) -> tuple[bool, str]:
+    """(runs?, reason). long_500k needs a sub-quadratic decode path
+    (DESIGN.md §4); every arch here has a decoder, so decode cells all run."""
+    if cell.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch: long_500k skipped (DESIGN.md §4)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str]]:
+    from .registry import ARCH_IDS
+
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]

@@ -1,0 +1,31 @@
+"""whisper-tiny [audio]: encoder-decoder, conv frontend STUB.
+
+4L d_model=384 6H (kv=6) d_ff=1536 vocab=51865
+[arXiv:2212.04356; unverified]
+
+Per the task brief the conv frontend is a stub: input_specs() provides
+precomputed frame embeddings (B, S, d_model) for the encoder. The decoder is
+causal with cross-attention; decode cells run (self-KV + cross-KV caches).
+Whisper uses LayerNorm + GELU (not rmsnorm/swiglu) and learned positions —
+modeled via norm="layernorm", act="gelu".
+"""
+
+from .arch import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,                 # decoder layers
+    n_enc_layers=4,             # encoder layers
+    enc_dec=True,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,
+    head_dim=64,
+    act="gelu",
+    norm="layernorm",
+    norm_eps=1e-5,
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,21 @@
+"""TSLGen-JAX — the paper's generator framework (DESIGN.md §1/§3).
+
+Public surface:
+    load_library(target=...)   -> generated + imported TSL module
+    generate_library(config)   -> on-disk package
+    GenConfig, Pipeline, core_pipeline — for custom pipelines (extension port)
+"""
+
+from .library import generate_library, load_library
+from .model import Context, GenConfig
+from .pipeline import GenerationError, Pipeline, core_pipeline
+
+__all__ = [
+    "load_library",
+    "generate_library",
+    "GenConfig",
+    "Context",
+    "Pipeline",
+    "core_pipeline",
+    "GenerationError",
+]

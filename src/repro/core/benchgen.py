@@ -1,0 +1,137 @@
+"""Benchmark-driven adaptive variant selection GPO — BEYOND PAPER.
+
+Paper §4.2: *"we recommend benchmarking all variants within the generation
+process and choosing the best-performing one [...] benchmarking alongside
+adaptive variant selection should be integrated as an ongoing process."*
+The paper leaves this as future work; we implement it.
+
+For every primitive with >1 valid candidate and a ``bench`` setup in its UPD,
+each candidate body is stage-1 rendered, exec'd into a scratch namespace,
+jit-compiled, and timed on the live host. Measured winners override the flag
+heuristic (``Selection.reason == "bench"``). Results are cached per UPD
+fingerprint so repeated generation is free ("ongoing process": a hardware
+change invalidates the cache via the probe flags in the key).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from . import engine
+from .model import Context, Selection
+from .select import hardware_flags, score, valid_candidates
+
+_PRELUDE = (
+    "import jax\nimport jax.numpy as jnp\nimport numpy as np\nfrom jax import lax\n"
+)
+
+
+def _bench_cache_path(ctx: Context) -> Path:
+    root = Path(__file__).resolve().parents[3] / "build" / "bench_cache"
+    root.mkdir(parents=True, exist_ok=True)
+    return root / f"{ctx.config.target}_{ctx.meta.get('fingerprint','x')}.json"
+
+
+def _compile_candidate(ctx: Context, prim, impl, ctype: str):
+    """exec a candidate implementation into a scratch module namespace."""
+    sru = ctx.targets[impl.target_extension].as_render_dict()
+    body = engine.render_stage1(impl.implementation, sru=sru, ctype=ctype,
+                                primitive=prim.name, params=prim.arg_names())
+    helpers = ""
+    if impl.helpers.strip():
+        helpers = engine.render_stage1(impl.helpers, sru=sru, ctype=ctype,
+                                       primitive=prim.name, params=prim.arg_names())
+    sig = prim.signature()
+    indented = "\n".join("    " + ln if ln.strip() else ln
+                         for ln in body.splitlines())
+    src = f"{_PRELUDE}\n{helpers}\n\ndef __cand__({sig}):\n{indented}\n"
+
+    class _Tgt:  # minimal TARGET stand-in for helper code
+        pass
+
+    for k, v in sru.items():
+        setattr(_Tgt, k, v)
+    ns: dict = {"TARGET": _Tgt}
+    exec(src, ns)  # noqa: S102 — trusted UPD, same trust domain as the repo
+    return ns["__cand__"]
+
+
+def _time_candidate(fn, args: dict, n_iter: int) -> float:
+    import jax
+
+    jfn = jax.jit(fn)
+    out = jfn(**args)
+    jax.block_until_ready(out)  # compile + warmup
+    t0 = time.perf_counter()
+    for _ in range(n_iter):
+        out = jfn(**args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n_iter
+
+
+class BenchSelectGPO:
+    name = "bench-select"
+
+    def run(self, ctx: Context) -> Context:
+        if ctx.errors:
+            return ctx
+        tgt = ctx.targets[ctx.config.target]
+        if not tgt.runs_on_host:
+            ctx.warn("bench-select: target does not run on this host; skipped")
+            return ctx
+        cache_path = _bench_cache_path(ctx)
+        cache: dict = {}
+        if cache_path.exists():
+            cache = json.loads(cache_path.read_text())
+        hw = hardware_flags(ctx)
+
+        for name, sels in ctx.selection.items():
+            prim = ctx.primitives[name]
+            if prim.bench is None:
+                continue
+            for ctype in list(sels):
+                cands = valid_candidates(prim, ctx.config.target, ctype, hw)
+                if len(cands) < 2:
+                    continue
+                key = f"{name}/{ctype}"
+                if key in cache:
+                    winner_idx = cache[key]["winner"]
+                else:
+                    # build sample inputs from the UPD bench setup
+                    sru = tgt.as_render_dict()
+                    setup_src = engine.render_stage1(
+                        prim.bench["setup"], sru=sru, ctype=ctype,
+                        primitive=name, params=prim.arg_names())
+                    ns: dict = {}
+                    exec(_PRELUDE + "\n" + setup_src, ns)  # noqa: S102
+                    args = ns["args"]
+                    times = []
+                    for impl in cands:
+                        try:
+                            fn = _compile_candidate(ctx, prim, impl, ctype)
+                            t = _time_candidate(fn, args, prim.bench["n_iter"])
+                        except Exception as e:  # candidate broken on host
+                            ctx.warn(f"bench-select {key}: candidate failed ({e})")
+                            t = float("inf")
+                        times.append(t)
+                    winner_idx = prim.definitions.index(
+                        cands[times.index(min(times))])
+                    cache[key] = {
+                        "winner": winner_idx,
+                        "times_us": [t * 1e6 for t in times],
+                        "candidates": [prim.definitions.index(c) for c in cands],
+                    }
+                impl = prim.definitions[winner_idx]
+                if sels[ctype].impl is not impl:
+                    sels[ctype] = Selection(
+                        primitive=name, target=ctx.config.target, ctype=ctype,
+                        impl=impl, score=score(impl, hw),
+                        candidates=len(cands), reason="bench",
+                    )
+                else:
+                    sels[ctype].reason = "bench"
+        cache_path.write_text(json.dumps(cache, indent=1))
+        ctx.meta["bench_cache"] = str(cache_path)
+        return ctx

@@ -1,0 +1,67 @@
+"""Build-environment generation GPO (paper §4.2, Fig 7).
+
+The paper generates CMake glue so the library integrates with zero effort.
+The Python/JAX analogue: a ``pyproject.toml`` for the generated package, a
+JSON build manifest (file list + selection provenance + fingerprint — what
+CMake's dependency tracking gave the paper), and an import shim.
+"""
+
+from __future__ import annotations
+
+import json
+
+from .model import Context, GeneratedFile
+
+_PYPROJECT = """[project]
+name = "{pkg}"
+version = "0.1.0"
+description = "Generated TSL (target {target}) — TSLGen-JAX"
+dependencies = ["jax", "numpy"]
+
+[tool.setuptools]
+packages = ["{pkg}"]
+"""
+
+
+class BuildGenGPO:
+    name = "buildgen"
+
+    def run(self, ctx: Context) -> Context:
+        if ctx.errors:
+            return ctx
+        manifest = {
+            "generator": "TSLGen-JAX",
+            "target": ctx.config.target,
+            "package": ctx.config.package_name,
+            "fingerprint": ctx.meta.get("fingerprint", ""),
+            "hardware_flags": ctx.meta.get("hardware_flags", []),
+            "cherry_picked": sorted(ctx.config.only) if ctx.config.only else None,
+            "files": sorted(f.relpath for f in ctx.files),
+            "primitives": {
+                name: {
+                    ctype: {
+                        "score": sel.score,
+                        "loc": sel.impl.loc,
+                        "is_native": sel.impl.is_native,
+                        "candidates": sel.candidates,
+                        "selected_by": sel.reason,
+                        "required_flags": list(sel.impl.flags),
+                    }
+                    for ctype, sel in sorted(sels.items())
+                }
+                for name, sels in sorted(ctx.selection.items())
+            },
+            "warnings": ctx.warnings,
+        }
+        ctx.files.append(GeneratedFile(
+            relpath="_manifest.json",
+            content=json.dumps(manifest, indent=1),
+            kind="build",
+        ))
+        ctx.files.append(GeneratedFile(
+            relpath="pyproject.toml",
+            content=_PYPROJECT.format(pkg=ctx.config.package_name,
+                                      target=ctx.config.target),
+            kind="build",
+        ))
+        return ctx

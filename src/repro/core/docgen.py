@@ -1,0 +1,41 @@
+"""Documentation-generation GPO (paper §4.2 names doc generation as a prime
+extension candidate — implemented here as a beyond-paper feature)."""
+
+from __future__ import annotations
+
+import collections
+
+from .model import Context, GeneratedFile
+
+
+class DocGenGPO:
+    name = "docgen"
+
+    def run(self, ctx: Context) -> Context:
+        if ctx.errors:
+            return ctx
+        groups = collections.defaultdict(list)
+        for name in sorted(ctx.selection):
+            groups[ctx.primitives[name].group].append(name)
+        for group, names in sorted(groups.items()):
+            lines = [f"# TSL primitives — group `{group}` (target `{ctx.config.target}`)", ""]
+            for name in names:
+                prim = ctx.primitives[name]
+                sels = ctx.selection[name]
+                lines.append(f"## `{name}({prim.signature()})`")
+                lines.append("")
+                if prim.brief:
+                    lines.append(prim.brief)
+                    lines.append("")
+                lines.append("| ctype | required flags | native | score | LOC | candidates |")
+                lines.append("|---|---|---|---|---|---|")
+                for ctype, sel in sorted(sels.items()):
+                    lines.append(
+                        f"| {ctype} | {', '.join(sel.impl.flags) or '—'} | "
+                        f"{sel.impl.is_native} | {sel.score} | {sel.impl.loc} | "
+                        f"{sel.candidates} |"
+                    )
+                lines.append("")
+            ctx.files.append(GeneratedFile(
+                relpath=f"docs/{group}.md", content="\n".join(lines), kind="doc"))
+        return ctx

@@ -1,0 +1,96 @@
+"""Public generator API: generate → materialize on disk → import.
+
+The C++ TSL is generated into a header tree and compiled into the consumer;
+the JAX analogue generates a Python package into ``build/tsl/`` and imports
+it. The package directory name embeds target + UPD fingerprint + cherry-pick
+hash, so regeneration is a cache hit when nothing changed (paper Fig 7a:
+cmake re-runs the generator; dependency tracking makes it cheap).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import importlib
+import sys
+from pathlib import Path
+from types import ModuleType
+
+from . import hwprobe, loader
+from .model import Context, GenConfig
+from .pipeline import core_pipeline
+
+DEFAULT_BUILD_ROOT = Path(__file__).resolve().parents[3] / "build" / "tsl"
+
+_IN_PROCESS_CACHE: dict[str, ModuleType] = {}
+
+
+def _pkg_name(config: GenConfig, fingerprint: str) -> str:
+    h = hashlib.sha256()
+    h.update(fingerprint.encode())
+    h.update(repr(sorted(config.only) if config.only else None).encode())
+    h.update(repr(config.hardware_flags).encode())
+    h.update(repr((config.emit_tests, config.emit_docs, config.emit_build,
+                   config.use_bench_selection)).encode())
+    return f"{config.package_name}_{config.target}_{h.hexdigest()[:10]}"
+
+
+def generate_library(config: GenConfig, build_root: Path | None = None,
+                     *, force: bool = False) -> tuple[Path, Context | None]:
+    """Run the pipeline and write the generated package. Returns (pkg_dir, ctx);
+    ctx is None on a disk-cache hit."""
+    build_root = Path(build_root or DEFAULT_BUILD_ROOT)
+    fingerprint = loader.upd_fingerprint(config.upd_paths)
+    pkg = _pkg_name(config, fingerprint)
+    pkg_dir = build_root / pkg
+    stamp = pkg_dir / "_manifest.json"
+    if stamp.exists() and not force:
+        return pkg_dir, None
+
+    config = GenConfig(**{**config.__dict__, "package_name": pkg})
+    ctx = core_pipeline(config).run(config)
+    pkg_dir.mkdir(parents=True, exist_ok=True)
+    for f in ctx.files:
+        out = pkg_dir / f.relpath
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.write_text(f.content)
+    if not (pkg_dir / "_manifest.json").exists():
+        # emit_build=False still needs the cache stamp
+        (pkg_dir / "_manifest.json").write_text("{}")
+    return pkg_dir, ctx
+
+
+def load_library(target: str = "auto", *, only: tuple[str, ...] | None = None,
+                 hardware_flags: tuple[str, ...] | None = None,
+                 emit_tests: bool = True, emit_docs: bool = False,
+                 use_bench_selection: bool = False,
+                 upd_paths: tuple[str, ...] = (),
+                 build_root: Path | None = None,
+                 force: bool = False) -> ModuleType:
+    """Generate (cached) and import the TSL for ``target``.
+
+    ``target='auto'`` probes the live backend (paper: cpuinfo flags feeding
+    the generator from cmake)."""
+    if target == "auto":
+        target = hwprobe.live_target()
+    config = GenConfig(
+        target=target,
+        hardware_flags=hardware_flags,
+        only=tuple(only) if only else None,
+        emit_tests=emit_tests,
+        emit_docs=emit_docs,
+        use_bench_selection=use_bench_selection,
+        upd_paths=tuple(upd_paths),
+    )
+    build_root = Path(build_root or DEFAULT_BUILD_ROOT)
+    pkg_dir, _ = generate_library(config, build_root, force=force)
+    pkg = pkg_dir.name
+    if pkg in _IN_PROCESS_CACHE and not force:
+        return _IN_PROCESS_CACHE[pkg]
+    if str(build_root) not in sys.path:
+        sys.path.insert(0, str(build_root))
+    if force and pkg in sys.modules:
+        for m in [m for m in sys.modules if m == pkg or m.startswith(pkg + ".")]:
+            del sys.modules[m]
+    mod = importlib.import_module(pkg)
+    _IN_PROCESS_CACHE[pkg] = mod
+    return mod

@@ -1,0 +1,107 @@
+"""GPO pipeline (paper Fig 5 ①).
+
+*"We designed our generator core as a pipeline consisting of multiple
+generator pipeline operators (GPO), where every GPO depends on the result of
+the previous one. That way, the GPOs remain exchangeable, and the pipeline can
+be altered in its behavior by changing an operator or expanded by adding
+further operators."*
+"""
+
+from __future__ import annotations
+
+from typing import Protocol
+
+from . import engine, loader
+from .model import Context, GenConfig
+
+
+class GPO(Protocol):
+    name: str
+
+    def run(self, ctx: Context) -> Context: ...
+
+
+class GenerationError(RuntimeError):
+    def __init__(self, errors: list[str], warnings: list[str]):
+        self.errors = errors
+        self.warnings = warnings
+        super().__init__(
+            "TSLGen pipeline failed:\n" + "\n".join(f"  error: {e}" for e in errors)
+        )
+
+
+class TemplateCheckGPO:
+    """Paper ①: 'every code template is loaded once into the framework and
+    subsequently validated' — Jinja2 syntax errors surface here, not mid-render."""
+
+    name = "template-check"
+
+    def run(self, ctx: Context) -> Context:
+        env = engine.environment()
+        for name in env.list_templates(filter_func=lambda n: n.endswith(".j2")):
+            try:
+                env.get_template(name)
+            except Exception as e:  # pragma: no cover - template bugs
+                ctx.fail(f"template {name!r}: {e}")
+        return ctx
+
+
+class Pipeline:
+    def __init__(self, operators: list[GPO]):
+        self.operators = list(operators)
+
+    def names(self) -> list[str]:
+        return [op.name for op in self.operators]
+
+    # exchangeability / extension port (paper Fig 5 ⑦)
+    def append(self, op: GPO) -> "Pipeline":
+        self.operators.append(op)
+        return self
+
+    def insert_after(self, name: str, op: GPO) -> "Pipeline":
+        for i, existing in enumerate(self.operators):
+            if existing.name == name:
+                self.operators.insert(i + 1, op)
+                return self
+        raise KeyError(f"no GPO named {name!r}")
+
+    def replace(self, name: str, op: GPO) -> "Pipeline":
+        for i, existing in enumerate(self.operators):
+            if existing.name == name:
+                self.operators[i] = op
+                return self
+        raise KeyError(f"no GPO named {name!r}")
+
+    def run(self, config: GenConfig, *, strict: bool = True) -> Context:
+        ctx = Context(config=config)
+        ctx.raw_targets = loader.load_raw_targets(config.upd_paths)
+        ctx.raw_primitives = loader.load_raw_primitives(config.upd_paths)
+        ctx.meta["fingerprint"] = loader.upd_fingerprint(config.upd_paths)
+        for op in self.operators:
+            ctx = op.run(ctx)
+            if ctx.errors and strict:
+                raise GenerationError(ctx.errors, ctx.warnings)
+        return ctx
+
+
+def core_pipeline(config: GenConfig) -> Pipeline:
+    """The fundamental four-GPO core (paper ①) + configured extension GPOs."""
+    from .benchgen import BenchSelectGPO
+    from .buildgen import BuildGenGPO
+    from .docgen import DocGenGPO
+    from .generate import GenerateGPO
+    from .select import SelectGPO
+    from .testgen import TestGenGPO
+    from .validate import ValidateGPO
+
+    pipe = Pipeline([TemplateCheckGPO(), ValidateGPO(), SelectGPO(), GenerateGPO()])
+    # extension port ⑦
+    if config.use_bench_selection:
+        pipe.insert_after("select", BenchSelectGPO())
+    if config.emit_tests:
+        pipe.append(TestGenGPO())
+    if config.emit_build:
+        pipe.append(BuildGenGPO())
+    if config.emit_docs:
+        pipe.append(DocGenGPO())
+    return pipe

@@ -1,0 +1,109 @@
+"""Token data pipeline: synthetic stream + memmap-backed dataset, per-host
+sharding, background prefetch, and RESUMABLE state (step counter lives in the
+checkpoint manifest, so restart replays from the exact batch).
+
+Straggler surface: `prefetch` decouples host data work from the device step;
+the StepWatchdog in launch/train.py reads the queue depth to distinguish
+"data-starved" from "compute-slow" steps.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from pathlib import Path
+
+import numpy as np
+
+
+@dataclass
+class DataState:
+    step: int = 0
+    epoch: int = 0
+
+    def as_dict(self):
+        return {"step": self.step, "epoch": self.epoch}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(step=int(d.get("step", 0)), epoch=int(d.get("epoch", 0)))
+
+
+class SyntheticTokens:
+    """Deterministic synthetic LM stream: Zipf-ish marginal + shift labels.
+    Deterministic in (seed, step, shard) — restart-safe by construction."""
+
+    def __init__(self, vocab: int, batch: int, seq: int, *, seed: int = 0,
+                 shard: int = 0, n_shards: int = 1):
+        self.vocab, self.batch, self.seq = vocab, batch, seq
+        self.seed, self.shard, self.n_shards = seed, shard, n_shards
+        assert batch % n_shards == 0
+
+    def batch_at(self, step: int):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        b = self.batch // self.n_shards
+        # Zipf-like marginal: heavier low ids (realistic token histogram)
+        u = rng.random((b, self.seq + 1))
+        toks = np.minimum((self.vocab * u ** 2.5).astype(np.int64),
+                          self.vocab - 1).astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class MemmapTokens:
+    """Flat binary token file (uint16/uint32) -> random crops, host-sharded."""
+
+    def __init__(self, path: str | Path, batch: int, seq: int, *,
+                 dtype: str = "uint16", seed: int = 0, shard: int = 0,
+                 n_shards: int = 1):
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        self.batch, self.seq = batch, seq
+        self.seed, self.shard, self.n_shards = seed, shard, n_shards
+        assert len(self.data) > seq + 1, "dataset shorter than one sequence"
+
+    def batch_at(self, step: int):
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        b = self.batch // self.n_shards
+        starts = rng.integers(0, len(self.data) - self.seq - 1, size=b)
+        rows = np.stack([np.asarray(self.data[s:s + self.seq + 1])
+                         for s in starts]).astype(np.int32)
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+class Prefetcher:
+    """Background thread keeping `depth` batches ready."""
+
+    def __init__(self, source, state: DataState, depth: int = 2):
+        self.source = source
+        self.state = state
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._next_step = state.step
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        while not self._stop.is_set():
+            batch = self.source.batch_at(self._next_step)
+            item = (self._next_step, batch)
+            self._next_step += 1
+            while not self._stop.is_set():
+                try:
+                    self.q.put(item, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def get(self):
+        step, batch = self.q.get()
+        self.state.step = step + 1
+        return batch
+
+    @property
+    def depth(self) -> int:
+        return self.q.qsize()
+
+    def stop(self):
+        self._stop.set()

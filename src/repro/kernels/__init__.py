@@ -1,0 +1,5 @@
+# Pallas TPU hot-spot kernels. Each subpackage: kernel.py (pl.pallas_call +
+# explicit BlockSpec VMEM tiling), ops.py (jit'd public wrapper with the
+# interpret switch), ref.py (pure-jnp oracle used by tests and by the cpu_xla
+# TSL definitions). Kernels are wired into the generated TSL via the UPD
+# (tsl_data/primitives/*.yaml) — the framework never calls them directly.

@@ -1,0 +1,38 @@
+"""Shared helpers for Pallas kernels: padding/tiling arithmetic.
+
+TPU tiling invariants (DESIGN.md §2, changed assumption 2): last dim in
+multiples of 128 lanes, second-to-last in multiples of 8 sublanes (f32) /
+16 (bf16); MXU likes 128x128 operands. Kernels pad to these and slice back.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 128
+SUBLANES = 8
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(x: int, m: int) -> int:
+    return cdiv(x, m) * m
+
+
+def pad_to(x, axis: int, multiple: int, value=0.0):
+    """Pad ``axis`` of x up to a multiple; returns (padded, original_size)."""
+    n = x.shape[axis]
+    target = round_up(n, multiple)
+    if target == n:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - n)
+    return jnp.pad(x, widths, constant_values=value), n
+
+
+def sublane_multiple(dtype) -> int:
+    """Min second-to-last-dim tile for a dtype (8 for 32-bit, 16 for 16-bit, 32 for 8-bit)."""
+    bits = jnp.dtype(dtype).itemsize * 8
+    return {32: 8, 16: 16, 8: 32}.get(bits, 8)

@@ -1,0 +1,142 @@
+"""Pallas TPU kernel: blockwise flash attention with GQA head folding.
+
+TPU adaptation of the (GPU-origin) FlashAttention online-softmax algorithm
+(DESIGN.md §2): instead of warp-level shared-memory staging, blocks of
+Q (bq × D) and K/V (bk × D) are staged HBM→VMEM by the Pallas pipeline; the
+two matmuls per step are MXU-shaped (bq,D)x(D,bk) and (bq,bk)x(bk,D) with
+f32 VREG accumulators held in VMEM scratch across the sequential k-grid.
+
+Grid: (B, H, Sq/bq, Sk/bk) — the last dimension is "arbitrary" (sequential)
+so the running (m, l, acc) scratch carries across k blocks; the first three
+are "parallel". GQA is folded via the K/V index maps (h -> h // group), so
+KV blocks are fetched once per KV head group without materializing the
+H-times-replicated cache in HBM — that replication is exactly the waste the
+GPU implementations avoid with shared memory, adapted here to VMEM reuse.
+
+VMEM per step (bq=bk=512, D=128, bf16): q 128K, k/v 256K, acc f32 256K,
+p f32 1M — ≈ 2 MiB, far under the v5e budget; larger bq trades grid steps
+for VMEM (hillclimb lever recorded in EXPERIMENTS.md §Perf).
+
+Causal masking uses global row/col iota comparison; fully-masked (qi, ki)
+tiles still execute (static grid) — skipping them is the classic 2x win,
+implemented as an early-exit `when` on the block predicate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+from ..common import cdiv
+
+NEG_INF = -1e30
+_LANES = 128
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, kv_len: int, q_offset: int,
+                  bq: int, bk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # global positions of this tile (ends-aligned causal: logical q row r
+    # attends to keys <= r + q_offset, supporting prefill continuation;
+    # q_offset = kv_len - logical_sq, computed on the UNPADDED q length)
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + q_offset
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+
+    # block-level early exit: skip fully-masked causal tiles
+    block_needed = jnp.logical_or(
+        jnp.logical_not(causal),
+        (ki * bk) <= (qi * bq + bq - 1 + q_offset),
+    )
+
+    @pl.when(block_needed)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        mask = k_pos < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos >= k_pos)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                         # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                        # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_new = corr * l_scr[:, :1] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        o = acc_scr[...] / jnp.maximum(l, 1e-30)
+        o = jnp.where(l > 0.0, o, 0.0)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def flash_attention_4d(q, k, v, *, causal: bool = True, scale: float | None = None,
+                       kv_len: int | None = None, q_offset: int | None = None,
+                       block_q: int = 512, block_k: int = 512,
+                       interpret: bool = False):
+    """q: (B,H,Sq,D); k,v: (B,KH,Sk,D). Shapes pre-padded to block multiples.
+
+    ``q_offset``: causal alignment of logical q row 0 (defaults kv_len - sq)."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    group = h // kh
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0, (sq, bq, sk, bk)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kv_len = kv_len if kv_len is not None else sk
+    q_offset = q_offset if q_offset is not None else kv_len - sq
+
+    grid = (b, h, sq // bq, sk // bk)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, kv_len=kv_len,
+        q_offset=q_offset, bq=bq, bk=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b_, h_, qi, ki, g=group: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running max (lane-replicated)
+            pltpu.VMEM((bq, _LANES), jnp.float32),   # running denominator
+            pltpu.VMEM((bq, d), jnp.float32),        # output accumulator
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="tsl_flash_attention",
+    )(q, k, v)

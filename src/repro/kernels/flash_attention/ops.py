@@ -1,0 +1,65 @@
+"""Public wrapper: pads sequence dims to block multiples, restores shape.
+
+Differentiable: the forward pass is the Pallas kernel; the backward pass is
+a custom VJP through the jnp oracle (correct, memory-heavier than a flash
+backward kernel — the dedicated dq/dk/dv kernel is recorded future work in
+DESIGN.md). Training through the TPU-target TSL therefore works today.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import pad_to
+from . import kernel, ref
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4, 5))
+def _fa(causal, scale, kv_len, block_q, block_k, interpret, q, k, v):
+    qp, _ = pad_to(q, 2, block_q)
+    kp, _ = pad_to(k, 2, block_k)
+    vp, _ = pad_to(v, 2, block_k)
+    out = kernel.flash_attention_4d(
+        qp, kp, vp, causal=causal, scale=scale, kv_len=kv_len,
+        q_offset=kv_len - q.shape[2], block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out[:, :, :q.shape[2]]
+
+
+def _fa_fwd(causal, scale, kv_len, block_q, block_k, interpret, q, k, v):
+    return _fa(causal, scale, kv_len, block_q, block_k, interpret, q, k, v), \
+        (q, k, v)
+
+
+def _fa_bwd(causal, scale, kv_len, block_q, block_k, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: ref.attention(q_, k_, v_, causal=causal,
+                                         scale=scale, kv_len=kv_len),
+        q, k, v)
+    return vjp(g)
+
+
+_fa.defvjp(_fa_fwd, _fa_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "scale", "kv_len", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    kv_len: int | None = None, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False):
+    """Flash attention with GQA. q (B,H,Sq,D), k/v (B,KH,Sk,D) -> (B,H,Sq,D).
+
+    Padded q rows are garbage and sliced off; padded k columns are masked by
+    kv_len inside the kernel; causal alignment uses the logical sq."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(128, sk))
+    kv_len = kv_len if kv_len is not None else sk
+    return _fa(causal, scale, kv_len, bq, bk, interpret, q, k, v)
+
+
+__all__ = ["flash_attention", "ref"]

@@ -1,0 +1,139 @@
+"""Pure-jnp oracle: full-materialization attention (GQA-aware, causal opt.)
+
+Also the cpu_xla TSL implementation — XLA fuses this well enough on CPU, and
+it is the ground truth the Pallas kernel must match bit-for-bit up to f32
+accumulation differences.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_kv(k, groups: int):
+    # (B, KH, S, D) -> (B, KH*groups, S, D)
+    b, kh, s, d = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, kh, groups, s, d)).reshape(b, kh * groups, s, d)
+
+
+def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+              kv_len: int | None = None):
+    """q: (B,H,Sq,D); k,v: (B,KH,Sk,D) with H % KH == 0. Returns (B,H,Sq,D).
+
+    kv_len masks out key positions >= kv_len (padding)."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    if h != kh:
+        k = _expand_kv(k, h // kh)
+        v = _expand_kv(v, h // kh)
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    neg = jnp.float32(-1e30)
+    if causal:
+        qi = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (prefill/decode)
+        ki = jnp.arange(sk)[None, :]
+        s = jnp.where(qi >= ki, s, neg)
+    if kv_len is not None:
+        s = jnp.where(jnp.arange(sk)[None, :] < kv_len, s, neg)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / jnp.maximum(l, 1e-30),
+                   v.astype(jnp.float32))
+    # fully-masked rows (e.g. sq > sk under ends-aligned causal) -> 0, matching
+    # the kernel's l==0 guard rather than a degenerate uniform average
+    o = jnp.where(m > -1e29, o, 0.0)
+    return o.astype(q.dtype)
+
+
+def attention_chunked(q, k, v, *, causal: bool = True, scale: float | None = None,
+                      kv_len: int | None = None, block_k: int = 1024):
+    """Flash-style chunked attention in PURE jnp: lax.scan over key blocks
+    with an online-softmax carry. The (Sq, Sk) score matrix never
+    materializes — per-step working set is (Sq, block_k), so the XLA memory
+    roofline drops from O(S²) to O(S·bk). Used as the specialized cpu_xla
+    TSL variant (§Perf yi-34b iteration); the Pallas kernel is the same
+    algorithm with explicit VMEM tiling.
+    """
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    assert h % kh == 0
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    kv_len = kv_len if kv_len is not None else sk
+    bk = min(block_k, sk)
+    pad = (-sk) % bk
+    if pad:
+        zp = ((0, 0), (0, 0), (0, pad), (0, 0))
+        k = jnp.pad(k, zp)
+        v = jnp.pad(v, zp)
+    nk = (sk + pad) // bk
+    qg = q.reshape(b, kh, g, sq, d).astype(jnp.float32)
+    kb = k.astype(jnp.float32).reshape(b, kh, nk, bk, d).transpose(2, 0, 1, 3, 4)
+    vb = v.astype(jnp.float32).reshape(b, kh, nk, bk, d).transpose(2, 0, 1, 3, 4)
+    q_pos = jnp.arange(sq) + (kv_len - sq)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kt, vt, ki = inp                                  # (B,KH,bk,D) x2
+        s = jnp.einsum("bkgqd,bked->bkgqe", qg, kt) * scale  # (B,KH,G,Sq,bk)
+        k_pos = ki * bk + jnp.arange(bk)
+        mask = k_pos[None, :] < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, q_pos[:, None] >= k_pos[None, :])
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = corr * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * corr + jnp.einsum("bkgqe,bked->bkgqd", p, vt)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, kh, g, sq, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, sq, d), jnp.float32)
+    # unroll follows the dry-run cost-measurement flag (XLA cost analysis
+    # counts while-loop bodies once; see nn/flags.py)
+    from repro.nn import flags as _nn_flags
+
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nk)),
+                                  unroll=_nn_flags.scan_unroll())
+    o = acc / jnp.maximum(l, 1e-30)
+    o = jnp.where(l > 0.0, o, 0.0)
+    return o.reshape(b, h, sq, d).astype(q.dtype)
+
+
+def attention_decode(q, k_cache, v_cache, *, kv_len=None, scale: float | None = None):
+    """Single-token decode: q (B,H,1,D) vs caches (B,KH,S,D).
+
+    GQA-grouped formulation: q is reshaped to (B,KH,G,D) and contracted
+    against the cache directly — the KV cache is NEVER head-expanded (the
+    broadcast would force GSPMD to reshard/gather the full cache). With the
+    cache sequence-sharded (sequence-parallel decode), the softmax reductions
+    become small cross-shard psums. ``kv_len`` may be traced (cache fill).
+    Memory-bound matvec — jnp is the right tool on every target.
+    """
+    from repro.dist.sharding import logical_constraint
+
+    b, h, _, d = q.shape
+    _, kh, s_max, _ = k_cache.shape
+    g = h // kh
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    qg = q.reshape(b, kh, g, d).astype(jnp.float32)
+    k_cache = logical_constraint(k_cache, "batch", None, "kvseq", None)
+    v_cache = logical_constraint(v_cache, "batch", None, "kvseq", None)
+    s = jnp.einsum("bkgd,bksd->bkgs", qg,
+                   k_cache.astype(jnp.float32)) * scale
+    s = logical_constraint(s, "batch", None, None, "kvseq")
+    if kv_len is not None:
+        mask = jnp.arange(s_max)[None, None, None, :] < kv_len
+        s = jnp.where(mask, s, jnp.float32(-1e30))
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgs,bksd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, h, 1, d).astype(q.dtype)

@@ -1,0 +1,36 @@
+"""Public wrapper for the hadd kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to, round_up, sublane_multiple
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "block_cols", "interpret"))
+def hadd(value, *, block_rows: int = 256, block_cols: int = 1024,
+         interpret: bool = False):
+    """Sum over the last axis of an arbitrary-rank input via the adder tree."""
+    lead = value.shape[:-1]
+    n = value.shape[-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    x2 = value.reshape(rows, n)
+    # pad columns to a power of two >= 128 lanes
+    p = 1 << max(7, (n - 1).bit_length())
+    x2, _ = pad_to(x2, 1, p)
+    bn = min(block_cols, p)
+    sub = sublane_multiple(value.dtype)
+    bm = min(block_rows, round_up(rows, sub))
+    x2, _ = pad_to(x2, 0, bm)
+    out = kernel.hadd_2d(x2, n_valid=n, block_rows=bm, block_cols=bn,
+                         interpret=interpret)
+    return out[:rows, 0].reshape(lead)
+
+
+__all__ = ["hadd", "ref"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for hadd (paper Fig 9)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hadd(value):
+    """Sum over the last axis (f32 accumulation for low precision)."""
+    if value.dtype in (jnp.bfloat16, jnp.float16):
+        return jnp.sum(value, axis=-1, dtype=jnp.float32).astype(value.dtype)
+    return jnp.sum(value, axis=-1)

@@ -1,0 +1,29 @@
+"""Public wrapper: 1-D data of any length -> padded (rows, 128) tile view."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import LANES, cdiv, round_up, sublane_multiple
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def range_count(data, low, high, *, block_rows: int = 512,
+                interpret: bool = False):
+    data = data.reshape(-1)
+    n = data.shape[0]
+    sub = sublane_multiple(data.dtype)
+    rows = max(sub, cdiv(n, LANES))
+    bm = min(block_rows, round_up(rows, sub))
+    rows = round_up(rows, bm)
+    padded = jnp.pad(data, (0, rows * LANES - n))
+    x2 = padded.reshape(rows, LANES)
+    return kernel.range_count_2d(x2, low, high, n_valid=n, block_rows=bm,
+                                 interpret=interpret)
+
+
+__all__ = ["range_count", "ref"]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the paper's range-count case study (Fig 8).
+
+`filter_count(data, l, u)` = number of elements with l <= x <= u.
+This is also the cpu_xla TSL implementation of the fused primitive.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def range_count(data, low, high):
+    data = data.reshape(-1)
+    mask = jnp.logical_and(data >= low, data <= high)
+    return jnp.sum(mask.astype(jnp.int32))

@@ -1,0 +1,32 @@
+"""Public wrapper for the RMSNorm kernel: shape-polymorphic, padded tiling."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to, round_up, sublane_multiple
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm(x, weight, *, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = False):
+    """RMSNorm over the last axis of an arbitrary-rank input."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    # tile alignment: rows to block multiple, block to sublane multiple
+    br = max(sublane_multiple(x.dtype), min(block_rows, round_up(rows, sublane_multiple(x.dtype))))
+    x2, n = pad_to(x2, 0, br)
+    out = kernel.rmsnorm_2d(x2, weight, eps=eps, block_rows=br,
+                            interpret=interpret)
+    return out[:n].reshape(orig_shape)
+
+
+__all__ = ["rmsnorm", "ref"]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for RMSNorm (and the cpu_xla TSL implementation)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm(x, weight, *, eps: float = 1e-6):
+    """RMS-normalize the last axis and scale: x / rms(x) * weight.
+
+    Statistics in f32 regardless of input dtype (production LM convention).
+    """
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(ms + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)

@@ -1,0 +1,32 @@
+"""Public wrapper for the softmax kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to, round_up, sublane_multiple
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax(x, *, block_rows: int = 256, interpret: bool = False):
+    """Stable softmax over the last axis, arbitrary rank.
+
+    Row padding uses -inf-like fill so padded rows normalize harmlessly."""
+    orig = x.shape
+    d = orig[-1]
+    rows = 1
+    for s in orig[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    sub = sublane_multiple(x.dtype)
+    bm = min(block_rows, round_up(rows, sub))
+    x2, n = pad_to(x2, 0, bm)
+    out = kernel.softmax_2d(x2, block_rows=bm, interpret=interpret)
+    return out[:n].reshape(orig)
+
+
+__all__ = ["softmax", "ref"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for row softmax (and the portable TSL implementation)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def softmax(x):
+    xf = x.astype(jnp.float32)
+    m = jnp.max(xf, axis=-1, keepdims=True)
+    p = jnp.exp(xf - m)
+    return (p / jnp.sum(p, axis=-1, keepdims=True)).astype(x.dtype)

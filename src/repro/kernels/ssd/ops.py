@@ -1,0 +1,93 @@
+"""Chunked SSD (Mamba2's state-space-duality algorithm), MXU-shaped.
+
+TPU adaptation of the GPU SSD kernel (DESIGN.md §2): the chunk-local quadratic
+part becomes two dense (L×L)·(L×·) matmuls that map onto the MXU, and the
+cross-chunk recurrence is a lax.scan over chunk states — a "linear attention
+with decay" decomposition:
+
+    y = (M ⊙ (C Bᵀ)) X  +  (decay · C) h_prev
+    M[t,s] = prod_{j=s+1..t} a_j  (causal, log-space cumulative sums)
+
+Sub-quadratic: O(T·L) instead of O(T²) — this is the primitive that makes the
+`long_500k` cell feasible for zamba2/rwkv6-family archs.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+# Python float, NOT jnp.float32 (see wkv6/ops.py: hoisted-constant dispatch bug)
+_NEG = -1e30
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked(x, a, b, c, *, h0=None, chunk: int = 128):
+    """Same contract as ref.ssd_scan, computed chunk-parallel.
+
+    x (B,T,H,P), a (B,T,H), b,c (B,T,N) -> y (B,T,H,P), h_final (B,H,P,N)."""
+    bsz, t, nh, p = x.shape
+    n = b.shape[-1]
+    L = min(chunk, t)
+    pad = (-t) % L
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    tt = t + pad
+    nc = tt // L
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, L, nh, p)
+    af = a.astype(jnp.float32).reshape(bsz, nc, L, nh)
+    bf = b.astype(jnp.float32).reshape(bsz, nc, L, n)
+    cf = c.astype(jnp.float32).reshape(bsz, nc, L, n)
+
+    la = jnp.log(jnp.maximum(af, 1e-20))           # (B,C,L,H)
+    cum = jnp.cumsum(la, axis=2)                    # log prod_{j<=t} a_j
+    # M[t,s] = exp(cum_t - cum_s) for s <= t, else 0 (strictly: prod_{s+1..t})
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,C,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, _NEG)
+    m = jnp.exp(seg)                                 # (B,C,L,L,H)
+
+    # intra-chunk: y_intra = (M ⊙ (C Bᵀ)) X    -- two MXU matmuls
+    cb = jnp.einsum("bctn,bcsn->bcts", cf, bf)       # (B,C,L,L)
+    g = cb[..., None] * m                            # (B,C,L,L,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", g, xf)
+
+    # chunk-boundary states: s_c = sum_s (prod_{j=s+1..L} a_j) x_s ⊗ b_s
+    tail = cum[:, :, -1:, :] - cum                   # log prod_{j=t+1..L}
+    w = jnp.exp(tail)                                # (B,C,L,H)
+    chunk_state = jnp.einsum("bcth,bcthp,bctn->bchpn", w, xf, bf)
+    a_chunk = jnp.exp(cum[:, :, -1, :])              # total chunk decay (B,C,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, nh, p, n), jnp.float32)
+
+    def scan_fn(hprev, inp):
+        s_c, a_c = inp                               # (B,H,P,N), (B,H)
+        hnew = a_c[:, :, None, None] * hprev + s_c
+        return hnew, hprev
+
+    h_final, h_prevs = jax.lax.scan(
+        scan_fn, h0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), a_chunk.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)       # (B,C,H,P,N) state BEFORE chunk
+
+    # inter-chunk: y_inter[t] = (prod_{j<=t} a_j) * (c_t @ h_prev)
+    decay_in = jnp.exp(cum)                          # (B,C,L,H)
+    y_inter = jnp.einsum("bcth,bctn,bchpn->bcthp", decay_in, cf, h_prevs)
+
+    y = (y_intra + y_inter).reshape(bsz, tt, nh, p)[:, :t]
+    return y.astype(x.dtype), h_final
+
+
+ssd_scan = ref.ssd_scan
+ssd_decode_step = ref.ssd_decode_step
+
+__all__ = ["ssd_chunked", "ssd_scan", "ssd_decode_step", "ref"]

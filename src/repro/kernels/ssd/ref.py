@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence (naive time scan).
+
+State-space duality recurrence (Mamba2, arXiv:2405.21060), scalar-per-head
+decay:
+
+    h_t = a_t * h_{t-1} + x_t ⊗ b_t          h: (B, H, P, N)
+    y_t = h_t @ c_t                           y: (B, H, P)
+
+with x (B,T,H,P), a (B,T,H) in (0,1), b,c (B,T,N) (shared across heads).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan(x, a, b, c, *, h0=None):
+    """Returns (y, h_final): y (B,T,H,P), h (B,H,P,N). f32 internally."""
+    bsz, t, h, p = x.shape
+    n = b.shape[-1]
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def step(hprev, inp):
+        xt, at, bt, ct = inp            # (B,H,P), (B,H), (B,N), (B,N)
+        hnew = at[:, :, None, None] * hprev + xt[..., None] * bt[:, None, None, :]
+        yt = jnp.einsum("bhpn,bn->bhp", hnew, ct)
+        return hnew, yt
+
+    hT, ys = jax.lax.scan(
+        step, h0,
+        (xf.transpose(1, 0, 2, 3), af.transpose(1, 0, 2),
+         bf.transpose(1, 0, 2), cf.transpose(1, 0, 2)),
+    )
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    return y, hT
+
+
+def ssd_decode_step(xt, at, bt, ct, h):
+    """One decode step: xt (B,H,P), at (B,H), bt/ct (B,N), h (B,H,P,N)."""
+    hf = h.astype(jnp.float32)
+    hnew = at.astype(jnp.float32)[:, :, None, None] * hf \
+        + xt.astype(jnp.float32)[..., None] * bt.astype(jnp.float32)[:, None, None, :]
+    yt = jnp.einsum("bhpn,bn->bhp", hnew, ct.astype(jnp.float32))
+    return yt.astype(xt.dtype), hnew

@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: fused SwiGLU (silu(gate) * up).
+
+Element-wise fusion: one VMEM round trip instead of three (silu read+write,
+multiply read+read+write). Memory-bound by construction — the win is purely
+the 2.5x HBM traffic reduction, which the §Roofline memory term sees.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _swiglu_kernel(g_ref, u_ref, o_ref):
+    g = g_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (g * jax.nn.sigmoid(g) * u).astype(o_ref.dtype)
+
+
+def swiglu_2d(gate, up, *, block_rows: int = 256, interpret: bool = False):
+    rows, d = gate.shape
+    bm = min(block_rows, rows)
+    assert rows % bm == 0
+    return pl.pallas_call(
+        _swiglu_kernel,
+        grid=(rows // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(gate.shape, gate.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+        name="tsl_swiglu",
+    )(gate, up)

@@ -1,0 +1,30 @@
+"""Public wrapper for the fused SwiGLU kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from ..common import pad_to, round_up, sublane_multiple
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def swiglu(gate, up, *, block_rows: int = 256, interpret: bool = False):
+    orig = gate.shape
+    d = orig[-1]
+    rows = 1
+    for s in orig[:-1]:
+        rows *= s
+    g2 = gate.reshape(rows, d)
+    u2 = up.reshape(rows, d)
+    sub = sublane_multiple(gate.dtype)
+    bm = min(block_rows, round_up(rows, sub))
+    g2, n = pad_to(g2, 0, bm)
+    u2, _ = pad_to(u2, 0, bm)
+    out = kernel.swiglu_2d(g2, u2, block_rows=bm, interpret=interpret)
+    return out[:n].reshape(orig)
+
+
+__all__ = ["swiglu", "ref"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the fused SwiGLU activation."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swiglu(gate, up):
+    """silu(gate) * up, computed in f32 and cast back."""
+    g = gate.astype(jnp.float32)
+    return (g * jax.nn.sigmoid(g) * up.astype(jnp.float32)).astype(gate.dtype)

@@ -1,0 +1,32 @@
+"""Public wrapper for the to_integral kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..common import pad_to, round_up, sublane_multiple
+from . import kernel, ref
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def to_integral(mask, *, block_rows: int = 512, interpret: bool = False):
+    """(..., n<=32) bool -> (...,) uint32 bitmask."""
+    n = mask.shape[-1]
+    assert n <= 32, "integral mask holds 32 lanes (paper §2.2 width pitfall)"
+    lead = mask.shape[:-1]
+    rows = 1
+    for s in lead:
+        rows *= s
+    m8 = mask.reshape(rows, n).astype(jnp.int8)
+    m8, _ = pad_to(m8, 1, 128)          # lane alignment
+    sub = 32                            # int8 sublane multiple
+    bm = min(block_rows, round_up(rows, sub))
+    m8, _ = pad_to(m8, 0, bm)
+    out = kernel.to_integral_2d(m8, n=n, block_rows=bm, interpret=interpret)
+    return out[:rows, 0].reshape(lead)
+
+
+__all__ = ["to_integral", "ref"]

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for to_integral / movemask (paper Fig 3/6)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def to_integral(mask):
+    """(..., n<=32) bool -> (...,) uint32 bitmask (bit i = lane i)."""
+    n = mask.shape[-1]
+    assert n <= 32
+    weights = jnp.left_shift(jnp.uint32(1), jnp.arange(n, dtype=jnp.uint32))
+    return jnp.sum(mask.astype(jnp.uint32) * weights, axis=-1, dtype=jnp.uint32)

@@ -1,0 +1,93 @@
+"""Chunked WKV6 — the Finch recurrence as chunk-local matmuls + a cross-chunk
+state scan (same decomposition family as ssd/ops.py, but with per-CHANNEL
+data-dependent decay, which is RWKV6's distinguishing feature).
+
+Log-space decay bookkeeping keeps the within-chunk decay ratios bounded;
+chunk length 32-64 is the numerically comfortable regime (decay ratios are
+products of ≤L per-channel w ∈ (0,1]).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+
+# Python float, NOT jnp.float32: a module-level device array would be hoisted
+# as a closed-over executable constant, which JAX's dispatch can drop across
+# repeated calls (observed "supplied 31 buffers but expected 32")
+_NEG = -60.0   # exp(-60) == 0 in f32; decay logs are negative
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def wkv6_chunked(r, k, v, w, u, *, s0=None, chunk: int = 64):
+    """Same contract as ref.wkv6_scan."""
+    bsz, t, nh, dk = r.shape
+    dv = v.shape[-1]
+    L = min(chunk, t)
+    pad = (-t) % L
+    if pad:
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r = jnp.pad(r, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        w = jnp.pad(w, zpad, constant_values=1.0)
+    tt = t + pad
+    nc = tt // L
+
+    rf = r.astype(jnp.float32).reshape(bsz, nc, L, nh, dk)
+    kf = k.astype(jnp.float32).reshape(bsz, nc, L, nh, dk)
+    vf = v.astype(jnp.float32).reshape(bsz, nc, L, nh, dv)
+    wf = w.astype(jnp.float32).reshape(bsz, nc, L, nh, dk)
+    uf = u.astype(jnp.float32)
+
+    lw = jnp.log(jnp.maximum(wf, 1e-20))
+    cum = jnp.cumsum(lw, axis=2)                     # log prod_{j<=t} w_j  (B,C,L,H,K)
+
+    # A_t = prod_{j<=t-1} w_j  (shifted cumulative product; A_1 = 1)
+    a_log = cum - lw                                  # log prod_{j<=t-1}
+
+    # intra-chunk, strictly causal s<t:
+    #   y_intra[t] = Σ_{s<t} (r_t ⊙ A_t) · (k_s ⊙ (W_chunk/A_{s+1} ... )) v_s
+    #   ratio(t,s) = prod_{j=s+1..t-1} w_j = exp(a_log_t - cum_s)
+    seg = a_log[:, :, :, None] - cum[:, :, None, :, :, :]    # (B,C,L,L,H,K)
+    strict = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    seg = jnp.where(strict[None, None, :, :, None, None], seg, _NEG)
+    att = jnp.einsum("bcthk,bctshk,bcshk->bctsh", rf, jnp.exp(seg), kf)
+    y_intra = jnp.einsum("bctsh,bcshv->bcthv", att, vf)
+
+    # diagonal s == t with the u bonus
+    y_diag = jnp.einsum("bcthk,hk,bcthk,bcthv->bcthv", rf, uf, kf, vf)
+
+    # inter-chunk: y_inter[t] = (r_t ⊙ A_t) @ S_prev
+    # chunk state update: S_new = diag(prod chunk w) S_prev + Σ_s (prod_{j>s} w_j) k_s ⊗ v_s
+    tail = cum[:, :, -1:] - cum                       # log prod_{j=s+1..L}
+    chunk_state = jnp.einsum("bcshk,bcshk,bcshv->bchkv", jnp.exp(tail), kf, vf)
+    w_chunk = jnp.exp(cum[:, :, -1])                  # (B,C,H,K)
+
+    if s0 is None:
+        s0 = jnp.zeros((bsz, nh, dk, dv), jnp.float32)
+
+    def scan_fn(sprev, inp):
+        s_c, w_c = inp
+        snew = w_c[..., None] * sprev + s_c
+        return snew, sprev
+
+    s_final, s_prevs = jax.lax.scan(
+        scan_fn, s0,
+        (chunk_state.transpose(1, 0, 2, 3, 4), w_chunk.transpose(1, 0, 2, 3)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)        # (B,C,H,K,V)
+
+    y_inter = jnp.einsum("bcthk,bchkv->bcthv", rf * jnp.exp(a_log), s_prevs)
+
+    y = (y_intra + y_diag + y_inter).reshape(bsz, tt, nh, dv)[:, :t]
+    return y.astype(r.dtype), s_final
+
+
+wkv6_scan = ref.wkv6_scan
+wkv6_decode_step = ref.wkv6_decode_step
+
+__all__ = ["wkv6_chunked", "wkv6_scan", "wkv6_decode_step", "ref"]

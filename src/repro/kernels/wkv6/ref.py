@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence (naive time scan).
+
+Per head (arXiv:2404.05892, data-dependent decay):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_tᵀ v_t)
+    S_t = diag(w_t) S_{t-1} + k_tᵀ v_t          S: (B, H, K, V)
+
+with r,k,w (B,T,H,K), v (B,T,H,V), u (H,K) bonus; w in (0,1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_scan(r, k, v, w, u, *, s0=None):
+    """Returns (y, s_final): y (B,T,H,V), s (B,H,K,V). f32 internally."""
+    bsz, t, h, dk = r.shape
+    dv = v.shape[-1]
+    rf, kf, vf, wf = (z.astype(jnp.float32) for z in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((bsz, h, dk, dv), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp            # (B,H,K),(B,H,K),(B,H,V),(B,H,K)
+        kv = kt[..., None] * vt[..., None, :]          # (B,H,K,V)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + uf[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+
+    sT, ys = jax.lax.scan(
+        step, s0,
+        (rf.transpose(1, 0, 2, 3), kf.transpose(1, 0, 2, 3),
+         vf.transpose(1, 0, 2, 3), wf.transpose(1, 0, 2, 3)))
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), sT
+
+
+def wkv6_decode_step(rt, kt, vt, wt, u, s):
+    """One decode step; shapes as in `step` above, s (B,H,K,V) f32."""
+    sf = s.astype(jnp.float32)
+    kv = kt.astype(jnp.float32)[..., None] * vt.astype(jnp.float32)[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                   sf + u.astype(jnp.float32)[None, :, :, None] * kv)
+    s_new = wt.astype(jnp.float32)[..., None] * sf + kv
+    return y.astype(rt.dtype), s_new

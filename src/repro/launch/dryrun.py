@@ -1,0 +1,360 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before ANY jax-touching import: jax locks the
+# device count at first init. 512 host devices back the production meshes
+# (16,16) and (2,16,16). This env is dryrun-only by design — tests/benches
+# see one device.
+
+"""Multi-pod dry-run (task brief deliverable (e)).
+
+For every (architecture × shape × mesh): build the step function, jit with
+explicit in/out shardings, ``.lower().compile()``, print memory_analysis() and
+cost_analysis(), parse collective bytes from the compiled HLO, and write a
+JSON record under experiments/dryrun/ for EXPERIMENTS.md §Dry-run/§Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable, get_config
+from repro.configs.registry import ARCH_IDS
+from repro.dist import sharding
+from repro.launch import roofline
+from repro.launch.mesh import make_production_mesh
+from repro.nn.model import build_model
+from repro.train.optimizer import OptConfig
+from repro.train.step import init_train_state, make_train_step
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# Production train_4k execution configs (per-device HBM fit on v5e 16 GiB):
+# microbatch counts keep per-device live activations (L x B/dp/uB x S x D x 2B
+# + logits) under budget; int8 Adam moments make the MoE giants fit (train
+# state = 2+1+1 B/param instead of 2+4+4). Justified per arch in
+# EXPERIMENTS.md §Dry-run.
+TRAIN_DEFAULTS: dict[str, dict] = {
+    "mistral-large-123b": {"microbatches": 16, "moment_dtype": "int8"},
+    "yi-34b": {"microbatches": 8},
+    "grok-1-314b": {"microbatches": 8, "moment_dtype": "int8"},
+    "arctic-480b": {"microbatches": 8, "moment_dtype": "int8"},
+    "qwen3-14b": {"microbatches": 4},
+    "zamba2-7b": {"microbatches": 4},
+    "rwkv6-7b": {"microbatches": 4},
+    "internvl2-2b": {"microbatches": 2},
+    "qwen1.5-0.5b": {"microbatches": 1},
+    "whisper-tiny": {"microbatches": 1},
+}
+
+
+def _mesh_tag(mesh) -> str:
+    return "x".join(str(s) for s in mesh.devices.shape)
+
+
+def depth_variants(cfg):
+    """(cfg_depth1, cfg_depth2, units): the two unrolled shallow lowerings
+    used to correct XLA's count-loop-body-once cost analysis, plus the number
+    of repeating units in the full model (fractional for zamba's remainder
+    layers — documented approximation)."""
+    if cfg.family == "hybrid":
+        k = cfg.attn_every
+        return (cfg.replace(n_layers=k), cfg.replace(n_layers=2 * k),
+                cfg.n_layers / k)
+    if cfg.family == "audio":
+        return (cfg.replace(n_layers=1, n_enc_layers=1),
+                cfg.replace(n_layers=2, n_enc_layers=2), cfg.n_layers)
+    return cfg.replace(n_layers=1), cfg.replace(n_layers=2), cfg.n_layers
+
+
+def build_lowerable(cfg, shape_name: str, mesh, opt_overrides=None):
+    """Returns (fn, example_args pytree of ShapeDtypeStruct, in_shardings,
+    out_shardings, meta)."""
+    cell = SHAPES[shape_name]
+    ok, reason = applicable(cfg, cell)
+    if not ok:
+        return None, reason
+    model = build_model(cfg)
+    overrides = opt_overrides or {}
+
+    if cell.kind == "train":
+        opt_cfg = OptConfig(moment_dtype=overrides.get("moment_dtype", "float32"))
+        step = make_train_step(model, opt_cfg,
+                               microbatches=overrides.get("microbatches", 1))
+        state_shapes = jax.eval_shape(
+            lambda: init_train_state(model, opt_cfg, jax.random.PRNGKey(0)))
+        pspec = sharding.param_shardings(mesh, state_shapes["params"])
+
+        def moments_sharding(mtree):
+            """Optimizer moments follow the param sharding leaf-for-leaf.
+            int8 moments replace each leaf with {"q": int8 (param shape),
+            "scale": f32 (last dim 1)} — q inherits the param spec, scale
+            drops the last axis."""
+            def match(ps, m):
+                if isinstance(m, dict) and set(m) == {"q", "scale"}:
+                    qspec = ps.spec
+                    sspec = P(*qspec[:-1], None) if len(qspec) else P()
+                    return {"q": NamedSharding(mesh, qspec),
+                            "scale": NamedSharding(mesh, sspec)}
+                return ps
+            return jax.tree.map(
+                match, pspec, mtree,
+                is_leaf=lambda x: isinstance(x, NamedSharding))
+
+        state_shardings = {
+            "params": pspec,
+            "opt": {
+                "m": moments_sharding(state_shapes["opt"]["m"]),
+                "v": moments_sharding(state_shapes["opt"]["v"]),
+                "count": NamedSharding(mesh, P()),
+            },
+        }
+        batch_shapes = model.input_specs(cell)
+        batch_shardings = sharding.batch_shardings(mesh, batch_shapes)
+        fn = step
+        args = (state_shapes, batch_shapes)
+        in_sh = (state_shardings, batch_shardings)
+        out_sh = (state_shardings, None)
+        meta = {"step": "train_step"}
+    elif cell.kind == "prefill":
+        specs = model.input_specs(cell)
+        params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        pshard = sharding.param_shardings(mesh, params_shapes)
+
+        def fn(params, batch):
+            return model.prefill(params, batch, cell.seq_len)
+
+        state_shapes = jax.eval_shape(
+            lambda: model.init_decode_state(cell.global_batch, cell.seq_len))
+        out_state_sh = sharding.state_shardings(mesh, state_shapes)
+        args = (params_shapes, specs)
+        in_sh = (pshard, sharding.batch_shardings(mesh, specs))
+        out_sh = (None, out_state_sh)
+        meta = {"step": "prefill_step"}
+    else:  # decode
+        specs = model.input_specs(cell)
+        params_shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+        pshard = sharding.param_shardings(mesh, params_shapes)
+        state_shapes = specs["state"]
+        sshard = sharding.state_shardings(mesh, state_shapes)
+
+        def fn(params, state, tokens, pos):
+            return model.decode_step(params, state, tokens, pos)
+
+        args = (params_shapes, state_shapes, specs["tokens"], specs["pos"])
+        in_sh = (pshard, sshard,
+                 sharding.batch_shardings(mesh, {"t": specs["tokens"]})["t"],
+                 NamedSharding(mesh, P()))
+        out_sh = (None, sshard)
+        meta = {"step": "serve_step"}
+    return (fn, args, in_sh, out_sh, meta), ""
+
+
+def _lower_compile(cfg, shape_name, mesh, opt_overrides):
+    built, reason = build_lowerable(cfg, shape_name, mesh, opt_overrides)
+    if built is None:
+        return None, reason
+    fn, args, in_sh, out_sh, meta = built
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    return (lowered, compiled, meta), ""
+
+
+def _cost_tuple(compiled):
+    cost = compiled.cost_analysis() or {}
+    coll = roofline.parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)), coll)
+
+
+def run_cell(arch_id: str, shape_name: str, mesh, *, verbose: bool = True,
+             opt_overrides=None, tag: str = "",
+             corrected_terms: bool = True) -> dict:
+    from repro.nn import flags as nn_flags
+
+    cell = SHAPES[shape_name]
+    cfg = get_config(arch_id)
+    chips = mesh.devices.size
+    record: dict = {
+        "arch": arch_id, "shape": shape_name, "mesh": _mesh_tag(mesh),
+        "chips": chips, "kind": cell.kind, "tag": tag,
+    }
+    # merge per-arch production defaults with explicit overrides
+    defaults = dict(TRAIN_DEFAULTS.get(arch_id, {})) if cell.kind == "train" else {}
+    defaults.update({k: v for k, v in (opt_overrides or {}).items()
+                     if v not in (None, "default")})
+    opt_overrides = defaults
+    record["exec_config"] = dict(opt_overrides)
+    t0 = time.perf_counter()
+    try:
+        # 1) the REQUIRED full-depth lowering: proves the sharding config is
+        #    coherent; memory_analysis is exact here (all buffers allocated)
+        out, reason = _lower_compile(cfg, shape_name, mesh, opt_overrides)
+        if out is None:
+            record["status"] = "skipped"
+            record["reason"] = reason
+            return record
+        lowered, compiled, meta = out
+        record.update(meta)
+        t_full = time.perf_counter() - t0
+        mem = compiled.memory_analysis()
+        raw_flops, raw_bytes, raw_coll = _cost_tuple(compiled)
+
+        # 2) depth-1/depth-2 UNROLLED lowerings: XLA cost analysis counts a
+        #    while-loop body once, so scan-based costs undercount by ~L. The
+        #    per-layer delta extrapolates the true cost linearly in depth.
+        corrected = None
+        if corrected_terms:
+            cfg1, cfg2, units = depth_variants(cfg)
+            # variants lower the WHOLE global batch in one microbatch: the
+            # microbatch scan is also a while loop XLA counts once, so µB=1
+            # gives the exact per-step math cost (memory_analysis above keeps
+            # the production µB). FSDP weight re-gathers under µB>1 are a
+            # modeled note in §Roofline, not in these terms.
+            var_overrides = dict(opt_overrides or {})
+            var_overrides["microbatches"] = 1
+            nn_flags.SCAN_UNROLL = True
+            try:
+                (l1, c1, _), _ = _lower_compile(cfg1, shape_name, mesh, var_overrides)
+                f1, b1, coll1 = _cost_tuple(c1)
+                (l2, c2, _), _ = _lower_compile(cfg2, shape_name, mesh, var_overrides)
+                f2, b2, coll2 = _cost_tuple(c2)
+            finally:
+                nn_flags.SCAN_UNROLL = False
+            # clamp at the depth-1 cost: per-layer deltas can be slightly
+            # negative on decode cells (layer-count-independent setup work
+            # dominates and compiles non-monotonically)
+            ext = lambda x1, x2: max(x1, x1 + (units - 1.0) * (x2 - x1), 0.0)
+            corrected = {
+                "flops": ext(f1, f2),
+                "bytes accessed": ext(b1, b2),
+            }
+            coll_eff = ext(coll1.effective_bytes, coll2.effective_bytes)
+            coll_counts = {
+                k: round(ext(coll1.counts.get(k, 0), coll2.counts.get(k, 0)), 1)
+                for k in set(coll1.counts) | set(coll2.counts)}
+            coll_bytes = {
+                k: ext(coll1.bytes_by_kind.get(k, 0), coll2.bytes_by_kind.get(k, 0))
+                for k in set(coll1.bytes_by_kind) | set(coll2.bytes_by_kind)}
+            coll_obj = roofline.CollectiveStats(coll_counts, coll_bytes, coll_eff)
+            record["depth_extrapolation"] = {
+                "units": units, "depth1_flops": f1, "depth2_flops": f2}
+        else:
+            coll_obj = raw_coll
+            corrected = {"flops": raw_flops, "bytes accessed": raw_bytes}
+
+        terms = roofline.roofline_terms(corrected, coll_obj)
+        mf = roofline.model_flops(cfg, cell, chips)
+        hlo_f = terms["hlo_flops_per_device"]
+        record.update({
+            "status": "ok",
+            "lower_compile_s": round(t_full, 2),
+            "memory_analysis": _mem_dict(mem),
+            "raw_scan_flops_per_device": raw_flops,
+            "raw_scan_bytes_per_device": raw_bytes,
+            "raw_scan_collectives": raw_coll.as_dict(),
+            "collectives": coll_obj.as_dict(),
+            "roofline": terms,
+            "model_flops_per_device": mf,
+            "useful_flops_ratio": (mf / hlo_f) if hlo_f else None,
+            "params": cfg.param_count(),
+            "params_active": cfg.param_count(active_only=True),
+        })
+        if verbose:
+            print(f"[dryrun] {arch_id} x {shape_name} x {_mesh_tag(mesh)}: OK "
+                  f"({t_full:.1f}s) dominant={terms['dominant']} "
+                  f"bound={terms['roofline_bound_s']:.4f}s "
+                  f"useful={record['useful_flops_ratio'] and round(record['useful_flops_ratio'],3)}")
+            print(f"  memory_analysis: {record['memory_analysis']}")
+            print(f"  corrected: flops/dev={hlo_f:.3e} "
+                  f"bytes/dev={terms['hlo_bytes_per_device']:.3e}")
+            print(f"  collectives: {coll_obj.counts}")
+    except Exception as e:  # noqa: BLE001 — a failure here is a finding
+        record["status"] = "failed"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[dryrun] {arch_id} x {shape_name} x {_mesh_tag(mesh)}: "
+                  f"FAILED — {record['error']}")
+    return record
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    args_b = out.get("argument_size_in_bytes", 0)
+    temp_b = out.get("temp_size_in_bytes", 0)
+    out["total_hbm_gib_per_device"] = round((args_b + temp_b) / 2**30, 3)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--moment-dtype", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel TP residual stream")
+    ap.add_argument("--ep", action="store_true",
+                    help="expert parallelism (expert dim on data axes)")
+    args = ap.parse_args(argv)
+
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(make_production_mesh(multi_pod=False))
+    if args.mesh in ("multi", "both"):
+        meshes.append(make_production_mesh(multi_pod=True))
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    overrides = {"moment_dtype": args.moment_dtype,
+                 "microbatches": args.microbatches}
+    if args.sp or args.ep:
+        from repro.nn import flags as nn_flags
+
+        nn_flags.SEQUENCE_PARALLEL = args.sp
+        nn_flags.EXPERT_PARALLEL = args.ep
+    n_fail = 0
+    for arch_id, shape_name in cells:
+        for mesh in meshes:
+            rec = run_cell(arch_id, shape_name, mesh, opt_overrides=overrides,
+                           tag=args.tag)
+            suffix = f"_{args.tag}" if args.tag else ""
+            out = OUT_DIR / f"{arch_id}_{shape_name}_{_mesh_tag(mesh)}{suffix}.json"
+            out.write_text(json.dumps(rec, indent=1))
+            if rec["status"] == "failed":
+                n_fail += 1
+    print(f"[dryrun] complete; {n_fail} failures")
+    return n_fail
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,30 @@
+"""Production mesh construction (task brief, MULTI-POD DRY-RUN §1).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+JAX device state, so tests/benches see one CPU device unless dryrun.py set
+XLA_FLAGS first.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(dp: int = 1, tp: int = 1):
+    """Small mesh over the real local devices (tests / examples)."""
+    return jax.make_mesh((dp, tp), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The data-parallel axes of a mesh (pod folds into DP when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axis(mesh) -> str | None:
+    return "model" if "model" in mesh.axis_names else None

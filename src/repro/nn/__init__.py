@@ -1,0 +1,5 @@
+"""Model zoo built on the generated TSL primitives (repro.tsl_api.ops).
+
+Pure-functional style: params are pytrees of jnp arrays; every model family
+exposes init / forward / prefill / decode_step through nn.model.build_model.
+"""

@@ -1,0 +1,133 @@
+"""Attention layer on TSL primitives: GQA + RoPE + optional qk_norm/bias.
+
+Full-sequence path uses tsl.flash_attention (Pallas on TPU targets);
+decode path uses tsl.attention_decode + tsl.cache_update (KV cache layout
+(B, KH, S_max, hd) — heads-major so the TP shard dim is contiguous).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.tsl_api import ops as tsl
+
+from .common import dense_init, split_keys
+from .rope import rope_tables
+
+
+def init_attention(key, cfg, dtype):
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = split_keys(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dtype),
+        "wk": dense_init(ks[1], (d, kh * hd), dtype),
+        "wv": dense_init(ks[2], (d, kh * hd), dtype),
+        "wo": dense_init(ks[3], (h * hd, d), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kh * hd,), dtype)
+        p["bv"] = jnp.zeros((kh * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions):
+    """x: (B,S,D) -> q (B,H,S,hd), k/v (B,KH,S,hd) with RoPE applied."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = tsl.matmul(x, p["wq"])
+    k = tsl.matmul(x, p["wk"])
+    v = tsl.matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    if cfg.qk_norm:
+        q = tsl.rmsnorm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = tsl.rmsnorm(k, p["k_norm"], eps=cfg.norm_eps)
+    cos, sin = rope_tables(positions, hd, cfg.rope_theta)   # (S, hd/2) or (B,S,hd/2)
+    if cos.ndim == 2:
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    q = tsl.rope_apply(q, cos, sin)
+    k = tsl.rope_apply(k, cos, sin)
+    # heads-major, heads TP-sharded (megatron-style attention parallelism)
+    from repro.dist.sharding import logical_constraint
+    q = logical_constraint(q.transpose(0, 2, 1, 3), "batch", "heads", None, None)
+    k = logical_constraint(k.transpose(0, 2, 1, 3), "batch", "heads", None, None)
+    v = logical_constraint(v.transpose(0, 2, 1, 3), "batch", "heads", None, None)
+    return q, k, v
+
+
+def attention_forward(p, x, cfg, *, causal: bool = True, positions=None):
+    """Full-sequence attention. x: (B,S,D) -> (B,S,D); returns (y, (k, v))."""
+    b, s, d = x.shape
+    if positions is None:
+        positions = jnp.arange(s)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    o = tsl.flash_attention(q, k, v, causal=causal)          # (B,H,S,hd)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.hd)
+    return tsl.matmul(o, p["wo"]), (k, v)
+
+
+def cross_attention_forward(p, x, k, v, cfg):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    q = tsl.matmul(x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    o = tsl.flash_attention(q, k, v, causal=False)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return tsl.matmul(o, p["wo"])
+
+
+def project_kv(p, x, cfg):
+    """Encoder-side K/V projection for cross attention. x: (B,S,D)."""
+    b, s, _ = x.shape
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    k = tsl.matmul(x, p["wk"])
+    v = tsl.matmul(x, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return (k.reshape(b, s, kh, hd).transpose(0, 2, 1, 3),
+            v.reshape(b, s, kh, hd).transpose(0, 2, 1, 3))
+
+
+def attention_decode(p, x_t, k_cache, v_cache, pos, cfg, *, rope: bool = True):
+    """One-token decode. x_t: (B,1,D); caches (B,KH,S_max,hd); pos: scalar.
+
+    Returns (y (B,1,D), k_cache', v_cache')."""
+    b = x_t.shape[0]
+    h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = tsl.matmul(x_t, p["wq"])
+    k = tsl.matmul(x_t, p["wk"])
+    v = tsl.matmul(x_t, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, 1, h, hd)
+    k = k.reshape(b, 1, kh, hd)
+    v = v.reshape(b, 1, kh, hd)
+    if cfg.qk_norm:
+        q = tsl.rmsnorm(q, p["q_norm"], eps=cfg.norm_eps)
+        k = tsl.rmsnorm(k, p["k_norm"], eps=cfg.norm_eps)
+    if rope:
+        cos, sin = rope_tables(jnp.asarray(pos)[None], hd, cfg.rope_theta)
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+        q = tsl.rope_apply(q, cos, sin)
+        k = tsl.rope_apply(k, cos, sin)
+    q = q.transpose(0, 2, 1, 3)
+    # cache layout (B,KH,S,hd): update along axis 2 -> move axis for tsl.cache_update (axis 1)
+    k_cache = jnp.swapaxes(
+        tsl.cache_update(jnp.swapaxes(k_cache, 1, 2), k, pos), 1, 2)
+    v_cache = jnp.swapaxes(
+        tsl.cache_update(jnp.swapaxes(v_cache, 1, 2), v, pos), 1, 2)
+    o = tsl.attention_decode(q, k_cache, v_cache, kv_len=pos + 1)
+    o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
+    return tsl.matmul(o, p["wo"]), k_cache, v_cache

@@ -1,0 +1,42 @@
+"""Shared building blocks: init helpers + norm dispatch over TSL primitives."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tsl_api import ops as tsl
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (production LM convention)."""
+    fan_in = shape[0] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def norm_apply(cfg, w, x, b=None):
+    """cfg.norm dispatch: rmsnorm (w) or layernorm (w, b) via TSL."""
+    if cfg.norm == "rmsnorm":
+        return tsl.rmsnorm(x, w, eps=cfg.norm_eps)
+    return tsl.layernorm(x, w, b, eps=cfg.norm_eps)
+
+
+def init_norm(cfg, dtype):
+    w = jnp.ones((cfg.d_model,), dtype)
+    if cfg.norm == "rmsnorm":
+        return {"w": w}
+    return {"w": w, "b": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def apply_norm_params(cfg, p, x):
+    return norm_apply(cfg, p["w"], x, p.get("b"))
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))

@@ -1,0 +1,28 @@
+"""Trace-time flags (read at trace time; set by dryrun variants).
+
+SCAN_UNROLL: when True, layer scans unroll — used by the dry-run's
+depth-1/depth-2 lowerings so XLA's cost analysis (which counts a while-loop
+body ONCE, regardless of trip count) sees every layer. Roofline terms are
+then extrapolated: cost(L) = cost(1) + (L-1)·[cost(2) - cost(1)].
+"""
+
+SCAN_UNROLL: bool = False
+
+# Sequence-parallel TP (Korthikanti et al.): residual stream sharded over
+# sequence on the model axis between blocks; GSPMD then lowers the per-block
+# boundary to reduce-scatter + all-gather instead of full all-reduces and
+# norms/residual math runs 1/TP-sharded. Enabled per dry-run via --sp.
+SEQUENCE_PARALLEL: bool = False
+
+# Expert parallelism (expert dim sharded on the data axes where divisible).
+# Measured WORSE than capacity-dim sharding on the (16,16) dry-run metric
+# (arctic train 126.7 -> 131.1 s, §Perf) — default off, kept as a lever.
+EXPERT_PARALLEL: bool = False
+
+
+def scan_unroll():
+    return True if SCAN_UNROLL else 1
+
+
+def residual_axes():
+    return ("batch", "seqtp", None) if SEQUENCE_PARALLEL else ("batch", None, None)

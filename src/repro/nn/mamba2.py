@@ -1,0 +1,97 @@
+"""Mamba2 block (zamba2 backbone) on TSL seq primitives.
+
+Block: in_proj -> [z | x | B | C | dt] -> causal_conv1d(x) -> SSD -> gated
+rmsnorm -> out_proj. Scalar-per-head decay a = exp(-exp(A_log)·softplus(dt)),
+input scaled by dt (the SSD discretization).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tsl_api import ops as tsl
+
+from .common import dense_init, split_keys
+
+
+def dims(cfg):
+    d_in = cfg.d_inner_mult * cfg.d_model
+    n_heads = d_in // cfg.ssm_head_dim
+    return d_in, n_heads, cfg.ssm_state, cfg.ssm_head_dim
+
+
+def init_mamba2(key, cfg, dtype):
+    d = cfg.d_model
+    d_in, nh, n, p_dim = dims(cfg)
+    ks = split_keys(key, 4)
+    proj_out = 2 * d_in + 2 * n + nh
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dtype),
+        "conv_w": dense_init(ks[1], (cfg.conv_width, d_in), dtype, scale=0.5),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "gate_norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    d_in, nh, n, _ = dims(cfg)
+    z = zxbcdt[..., :d_in]
+    x = zxbcdt[..., d_in:2 * d_in]
+    b = zxbcdt[..., 2 * d_in:2 * d_in + n]
+    c = zxbcdt[..., 2 * d_in + n:2 * d_in + 2 * n]
+    dt = zxbcdt[..., 2 * d_in + 2 * n:]
+    return z, x, b, c, dt
+
+
+def _discretize(p, dt_raw, x, cfg):
+    """-> (a (B,T,H) decay, x_scaled (B,T,H,P))."""
+    _, nh, _, p_dim = dims(cfg)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["A_log"]) * dt)
+    xh = x.reshape(*x.shape[:-1], nh, p_dim)
+    x_scaled = (xh.astype(jnp.float32) * dt[..., None]).astype(x.dtype)
+    return a.astype(x.dtype), x_scaled, xh
+
+
+def mamba2_forward(p, x_seq, cfg, *, h0=None, conv_prev=None):
+    """x_seq: (B,T,D) -> (y (B,T,D), (h_final, conv_tail))."""
+    bsz, t, d = x_seq.shape
+    d_in, nh, n, p_dim = dims(cfg)
+    zxbcdt = tsl.matmul(x_seq, p["in_proj"])
+    z, xr, b, c, dt_raw = _split_proj(zxbcdt, cfg)
+    if conv_prev is not None:
+        xr_in = jnp.concatenate([conv_prev, xr], axis=1)
+        xc = tsl.causal_conv1d(xr_in, p["conv_w"])[:, conv_prev.shape[1]:]
+    else:
+        xc = tsl.causal_conv1d(xr, p["conv_w"])
+    xc = tsl.silu(xc)
+    a, x_scaled, xh = _discretize(p, dt_raw, xc, cfg)
+    y, h_final = tsl.ssd_scan(x_scaled, a, b, c, h0=h0)
+    y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
+    y = y.reshape(bsz, t, d_in)
+    y = tsl.rmsnorm(y * tsl.silu(z), p["gate_norm_w"], eps=cfg.norm_eps)
+    conv_tail = xr[:, -(cfg.conv_width - 1):] if cfg.conv_width > 1 else None
+    return tsl.matmul(y, p["out_proj"]), (h_final, conv_tail)
+
+
+def mamba2_decode(p, x_t, cfg, h, conv_cache):
+    """One step. x_t (B,1,D); h (B,H,P,N) f32; conv_cache (B,KW-1,d_in)."""
+    bsz, _, d = x_t.shape
+    d_in, nh, n, p_dim = dims(cfg)
+    zxbcdt = tsl.matmul(x_t, p["in_proj"])
+    z, xr, b, c, dt_raw = _split_proj(zxbcdt, cfg)
+    window = jnp.concatenate([conv_cache, xr], axis=1)      # (B,KW,d_in)
+    conv_cache = window[:, 1:]
+    xc = jnp.sum(window.astype(jnp.float32)
+                 * p["conv_w"].astype(jnp.float32)[None], axis=1, keepdims=True)
+    xc = tsl.silu(xc.astype(x_t.dtype))
+    a, x_scaled, xh = _discretize(p, dt_raw, xc, cfg)
+    yt, h = tsl.ssd_decode(x_scaled[:, 0], a[:, 0], b[:, 0], c[:, 0], h)
+    yt = yt + p["D_skip"][None, :, None].astype(yt.dtype) * xh[:, 0]
+    yt = yt.reshape(bsz, 1, d_in)
+    yt = tsl.rmsnorm(yt * tsl.silu(z), p["gate_norm_w"], eps=cfg.norm_eps)
+    return tsl.matmul(yt, p["out_proj"]), h, conv_cache

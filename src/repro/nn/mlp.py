@@ -1,0 +1,32 @@
+"""Dense MLP blocks (SwiGLU / GELU) on TSL primitives."""
+
+from __future__ import annotations
+
+from repro.tsl_api import ops as tsl
+
+from .common import dense_init, split_keys
+
+
+def init_mlp(key, cfg, dtype, d_ff: int | None = None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    ks = split_keys(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], (d, ff), dtype),
+            "w_up": dense_init(ks[1], (d, ff), dtype),
+            "w_down": dense_init(ks[2], (ff, d), dtype),
+        }
+    return {
+        "w_in": dense_init(ks[0], (d, ff), dtype),
+        "w_out": dense_init(ks[1], (ff, d), dtype),
+    }
+
+
+def mlp_forward(p, x, cfg):
+    if "w_gate" in p:
+        g = tsl.matmul(x, p["w_gate"])
+        u = tsl.matmul(x, p["w_up"])
+        return tsl.matmul(tsl.swiglu(g, u), p["w_down"])
+    h = tsl.gelu(tsl.matmul(x, p["w_in"]))
+    return tsl.matmul(h, p["w_out"])

@@ -1,0 +1,163 @@
+"""Model facade: family dispatch + loss + input specs for the dry-run.
+
+build_model(cfg) returns a Model with a uniform surface:
+    init(key) -> params
+    loss(params, batch) -> (scalar, metrics)
+    forward_logits(params, batch) -> logits
+    prefill(params, batch, max_len) -> (last_logits, state)
+    decode_step(params, state, tokens_t, pos) -> (logits, state)
+    init_decode_state(batch, max_len) -> zeroed state pytree
+    input_specs(cell) -> dict[str, ShapeDtypeStruct-compatible jnp dtypes]
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.arch import ArchConfig
+from repro.configs.shapes import ShapeCell
+from repro.tsl_api import ops as tsl
+
+from . import encdec, lm, rwkv_lm, zamba
+
+
+def _xent_loss(logits, labels, n_prefix: int = 0):
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    per_tok = tsl.cross_entropy(logits, labels)
+    return jnp.mean(per_tok)
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    _forward: Callable           # (params, batch, remat) -> (logits, aux, _)
+    prefill: Callable            # (params, batch, max_len) -> (logits, state)
+    decode_step: Callable        # (params, state, tokens, pos) -> (logits, state)
+    init_decode_state: Callable  # (batch, max_len) -> state
+
+    def forward_logits(self, params, batch, *, remat: bool = False):
+        logits, _, _ = self._forward(params, batch, remat)
+        return logits
+
+    def loss(self, params, batch, *, remat: bool = True):
+        logits, aux, _ = self._forward(params, batch, remat)
+        n_prefix = self.cfg.vision_prefix if self.cfg.family == "vlm" else 0
+        ce = _xent_loss(logits, batch["labels"], n_prefix)
+        total = ce + 0.01 * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # -- dry-run input specs (ShapeDtypeStruct stand-ins, no allocation) -----
+
+    def input_specs(self, cell: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+        cfg = self.cfg
+        B, S = cell.global_batch, cell.seq_len
+        tok = jnp.int32
+        emb = jnp.dtype(cfg.dtype)
+        if cell.kind == "train":
+            specs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), tok),
+                "labels": jax.ShapeDtypeStruct((B, S), tok),
+            }
+            if cfg.family == "vlm":
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_prefix, cfg.d_model), emb)
+            if cfg.family == "audio":
+                specs["audio_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), emb)
+            return specs
+        if cell.kind == "prefill":
+            specs = {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+            if cfg.family == "vlm":
+                specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                    (B, cfg.vision_prefix, cfg.d_model), emb)
+            if cfg.family == "audio":
+                specs["audio_embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), emb)
+            return specs
+        # decode: one token + the state pytree (KV cache of seq_len)
+        state = jax.eval_shape(lambda: self.init_decode_state(B, S))
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), tok),
+            "state": state,
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        def fwd(params, batch, remat):
+            return lm.lm_forward(params, batch["tokens"], cfg,
+                                 vision_embeds=batch.get("vision_embeds"),
+                                 remat=remat)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: lm.init_lm(key, cfg),
+            _forward=fwd,
+            prefill=lambda p, batch, max_len: lm.lm_prefill(
+                p, batch["tokens"], cfg, max_len=max_len,
+                vision_embeds=batch.get("vision_embeds")),
+            decode_step=lambda p, st, t, pos: lm.lm_decode_step(p, st, t, pos, cfg),
+            init_decode_state=lambda b, s: lm.init_decode_state(
+                cfg, b, s, jnp.dtype(cfg.dtype)),
+        )
+    if fam == "hybrid":
+        def fwd(params, batch, remat):
+            return zamba.zamba_forward(params, batch["tokens"], cfg, remat=remat)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: zamba.init_zamba(key, cfg),
+            _forward=fwd,
+            prefill=lambda p, batch, max_len: zamba.zamba_prefill(
+                p, batch["tokens"], cfg, max_len=max_len),
+            decode_step=lambda p, st, t, pos: zamba.zamba_decode_step(
+                p, st, t, pos, cfg),
+            init_decode_state=lambda b, s: zamba.init_zamba_state(
+                cfg, b, s, jnp.dtype(cfg.dtype)),
+        )
+    if fam == "ssm":
+        def fwd(params, batch, remat):
+            return rwkv_lm.rwkv_forward(params, batch["tokens"], cfg, remat=remat)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: rwkv_lm.init_rwkv_lm(key, cfg),
+            _forward=fwd,
+            prefill=lambda p, batch, max_len: rwkv_prefill(p, batch, cfg),
+            decode_step=lambda p, st, t, pos: rwkv_lm.rwkv_decode_step(
+                p, st, t, pos, cfg),
+            init_decode_state=lambda b, s: rwkv_lm.init_rwkv_state(
+                cfg, b, jnp.dtype(cfg.dtype)),
+        )
+    if fam == "audio":
+        def fwd(params, batch, remat):
+            return encdec.encdec_forward(params, batch["tokens"], cfg,
+                                         audio_embeds=batch["audio_embeds"],
+                                         remat=remat)
+
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            _forward=fwd,
+            prefill=lambda p, batch, max_len: encdec.encdec_prefill(
+                p, batch["tokens"], cfg, audio_embeds=batch["audio_embeds"],
+                max_len=max_len),
+            decode_step=lambda p, st, t, pos: encdec.encdec_decode_step(
+                p, st, t, pos, cfg),
+            init_decode_state=lambda b, s: encdec.init_encdec_state(
+                cfg, b, s, enc_len=s, dtype=jnp.dtype(cfg.dtype)),
+        )
+    raise ValueError(f"unknown family {fam!r}")
+
+
+def rwkv_prefill(params, batch, cfg):
+    logits, _, state = rwkv_lm.rwkv_forward(params, batch["tokens"], cfg,
+                                            remat=False, collect_state=True,
+                                            last_only=True)
+    return logits[:, -1], state

@@ -1,0 +1,76 @@
+"""Mixture-of-Experts layer (grok/arctic) on TSL moe primitives.
+
+Capacity-based dispatch (static shapes), batched expert einsum, optional
+dense residual branch (arctic). Aux load-balancing loss (Switch-style)
+returned alongside the output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tsl_api import ops as tsl
+
+from .common import dense_init, split_keys
+from .mlp import init_mlp, mlp_forward
+
+
+def init_moe(key, cfg, dtype):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = split_keys(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), dtype),
+        "w_gate": dense_init(ks[1], (e, d, ff), dtype),
+        "w_up": dense_init(ks[2], (e, d, ff), dtype),
+        "w_down": dense_init(ks[3], (e, ff, d), dtype),
+    }
+    if cfg.moe_dense_residual:
+        p["dense"] = init_mlp(ks[4], cfg, dtype, d_ff=cfg.dense_residual_ff or d)
+    return p
+
+
+def capacity_for(cfg, tokens: int) -> int:
+    cap = int(tokens * cfg.experts_per_token * cfg.capacity_factor
+              / cfg.n_experts)
+    return max(8, cap)
+
+
+def moe_forward(p, x, cfg):
+    """x: (B,S,D) -> (y, aux_loss)."""
+    from repro.dist.sharding import logical_constraint
+
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    logits = tsl.matmul(x2, p["router"])
+    weights, idx = tsl.topk_gating(logits, k=cfg.experts_per_token)
+    cap = capacity_for(cfg, b * s)
+    xe, info = tsl.moe_dispatch(x2, idx, weights, n_experts=cfg.n_experts,
+                                capacity=cap)
+    # pin the expert-batch layout — without this GSPMD is free to replicate
+    # the (E, C, d) dispatch tensor across the mesh (§Perf grok iteration 1).
+    # EP when the expert count divides the data axes (arctic: the scatter
+    # becomes the canonical all-to-all token exchange); otherwise shard the
+    # capacity dim (grok).
+    from repro.dist.sharding import ambient_dp_size
+    from repro.nn import flags as _nn_flags
+    dp_size = ambient_dp_size()
+    if _nn_flags.EXPERT_PARALLEL and dp_size > 1 and cfg.n_experts % dp_size == 0:
+        exe_axes = ("expdp", None, None)
+    else:
+        exe_axes = (None, "batch", None)
+    xe = logical_constraint(xe, *exe_axes)
+    ye = tsl.expert_ffn(xe, p["w_gate"], p["w_up"], p["w_down"])
+    ye = logical_constraint(ye, *exe_axes)
+    y = tsl.moe_combine(ye, info).reshape(b, s, d)
+
+    # Switch-style load-balance aux loss: E * sum_e f_e * p_e
+    gates = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    importance = jnp.mean(gates, axis=0)
+    onehot = jax.nn.one_hot(idx[:, 0], cfg.n_experts, dtype=jnp.float32)
+    load = jnp.mean(onehot, axis=0)
+    aux = cfg.n_experts * jnp.sum(importance * load)
+
+    if cfg.moe_dense_residual:
+        y = y + mlp_forward(p["dense"], x, cfg).reshape(b, s, d)
+    return y, aux

@@ -1,0 +1,13 @@
+"""Rotary position embedding tables (half-split layout, matches TSL rope_apply)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_tables(positions, head_dim: int, theta: float = 1e4):
+    """positions: int array (...,) -> (cos, sin) of shape (..., head_dim//2), f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)

@@ -1,0 +1,104 @@
+"""RWKV6 (Finch) block on TSL seq primitives: time-mix (WKV with
+data-dependent decay via a LoRA on w) + channel-mix, token-shift throughout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tsl_api import ops as tsl
+
+from .common import dense_init, split_keys
+
+_W_LORA = 64
+
+
+def dims(cfg):
+    k = cfg.rwkv_head_dim
+    nh = cfg.d_model // k
+    return nh, k
+
+
+def init_rwkv6(key, cfg, dtype):
+    d = cfg.d_model
+    nh, hk = dims(cfg)
+    ks = split_keys(key, 10)
+    return {
+        # time mix
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_v": jnp.full((d,), 0.5, dtype),
+        "mu_w": jnp.full((d,), 0.5, dtype),
+        "mu_g": jnp.full((d,), 0.5, dtype),
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wg": dense_init(ks[3], (d, d), dtype),
+        "w_lora_a": dense_init(ks[4], (d, _W_LORA), dtype),
+        "w_lora_b": dense_init(ks[5], (_W_LORA, d), dtype, scale=0.01),
+        "w_base": jnp.full((d,), -6.0, jnp.float32),   # decay bias (w≈exp(-exp(-6)))
+        "u_bonus": dense_init(ks[6], (nh, hk), dtype),
+        "wo": dense_init(ks[7], (d, d), dtype),
+        "ln_x_w": jnp.ones((d,), dtype),
+        # channel mix
+        "cm_mu_k": jnp.full((d,), 0.5, dtype),
+        "cm_mu_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": dense_init(ks[8], (d, cfg.d_ff), dtype),
+        "cm_wv": dense_init(ks[9], (cfg.d_ff, d), dtype),
+        "cm_wr": dense_init(ks[4], (d, d), dtype),
+    }
+
+
+def _decay(p, xw):
+    """Data-dependent per-channel decay w_t in (0,1): exp(-exp(base + lora))."""
+    lora = tsl.matmul(tsl.matmul(xw, p["w_lora_a"]), p["w_lora_b"])
+    return jnp.exp(-jnp.exp(p["w_base"] + lora.astype(jnp.float32)))
+
+
+def time_mix_forward(p, x, cfg, *, prev_tok=None, s0=None):
+    """x (B,T,D) -> (y, (last_tok, s_final))."""
+    bsz, t, d = x.shape
+    nh, hk = dims(cfg)
+    xr = tsl.token_shift(x, p["mu_r"], prev=prev_tok)
+    xk = tsl.token_shift(x, p["mu_k"], prev=prev_tok)
+    xv = tsl.token_shift(x, p["mu_v"], prev=prev_tok)
+    xw = tsl.token_shift(x, p["mu_w"], prev=prev_tok)
+    xg = tsl.token_shift(x, p["mu_g"], prev=prev_tok)
+    r = tsl.matmul(xr, p["wr"]).reshape(bsz, t, nh, hk)
+    k = tsl.matmul(xk, p["wk"]).reshape(bsz, t, nh, hk)
+    v = tsl.matmul(xv, p["wv"]).reshape(bsz, t, nh, hk)
+    w = _decay(p, xw).reshape(bsz, t, nh, hk).astype(x.dtype)
+    g = tsl.silu(tsl.matmul(xg, p["wg"]))
+    y, s_final = tsl.wkv6_scan(r, k, v, w, p["u_bonus"], s0=s0)
+    y = y.reshape(bsz, t, d)
+    y = tsl.rmsnorm(y, p["ln_x_w"], eps=cfg.norm_eps) * g
+    return tsl.matmul(y, p["wo"]), (x[:, -1], s_final)
+
+
+def time_mix_decode(p, x_t, cfg, prev_tok, s):
+    """x_t (B,1,D); prev_tok (B,D); s (B,H,K,V) f32."""
+    bsz, _, d = x_t.shape
+    nh, hk = dims(cfg)
+    xr = tsl.token_shift(x_t, p["mu_r"], prev=prev_tok)
+    xk = tsl.token_shift(x_t, p["mu_k"], prev=prev_tok)
+    xv = tsl.token_shift(x_t, p["mu_v"], prev=prev_tok)
+    xw = tsl.token_shift(x_t, p["mu_w"], prev=prev_tok)
+    xg = tsl.token_shift(x_t, p["mu_g"], prev=prev_tok)
+    r = tsl.matmul(xr, p["wr"]).reshape(bsz, nh, hk)
+    k = tsl.matmul(xk, p["wk"]).reshape(bsz, nh, hk)
+    v = tsl.matmul(xv, p["wv"]).reshape(bsz, nh, hk)
+    w = _decay(p, xw).reshape(bsz, nh, hk).astype(x_t.dtype)
+    g = tsl.silu(tsl.matmul(xg, p["wg"]))
+    yt, s = tsl.wkv6_decode(r, k, v, w, p["u_bonus"], s)
+    yt = yt.reshape(bsz, 1, d)
+    yt = tsl.rmsnorm(yt, p["ln_x_w"], eps=cfg.norm_eps) * g
+    return tsl.matmul(yt, p["wo"]), x_t[:, -1], s
+
+
+def channel_mix_forward(p, x, cfg, *, prev_tok=None):
+    xk = tsl.token_shift(x, p["cm_mu_k"], prev=prev_tok)
+    xr = tsl.token_shift(x, p["cm_mu_r"], prev=prev_tok)
+    k = tsl.matmul(xk, p["cm_wk"])
+    k = jnp.square(jax.nn.relu(k))
+    return tsl.sigmoid(tsl.matmul(xr, p["cm_wr"])) * tsl.matmul(k, p["cm_wv"]), x[:, -1]

@@ -1,0 +1,116 @@
+"""RWKV6 LM (Finch): attention-free stack of time-mix + channel-mix blocks.
+
+Token-shift previous-token states are stored in NORMED space (the value that
+token_shift actually mixes), so forward-collected states and decode-carried
+states agree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tsl_api import ops as tsl
+
+from repro.nn import flags as _nn_flags
+
+
+def _scan(f, init, xs, **kw):
+    return jax.lax.scan(f, init, xs, unroll=_nn_flags.scan_unroll(), **kw)
+
+
+from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
+from .lm import lm_head
+from .rwkv6 import (channel_mix_forward, dims as r6_dims, init_rwkv6,
+                    time_mix_decode, time_mix_forward)
+
+
+def _init_block(key, cfg, dtype):
+    return {
+        "ln1": init_norm(cfg, dtype),
+        "ln2": init_norm(cfg, dtype),
+        "mix": init_rwkv6(key, cfg, dtype),
+    }
+
+
+def init_rwkv_lm(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = split_keys(key, 4)
+    bkeys = jnp.stack(split_keys(ks[0], cfg.n_layers))
+    return {
+        "embed": embed_init(ks[1], (cfg.padded_vocab, cfg.d_model), dtype),
+        "ln_in": init_norm(cfg, dtype),
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg, dtype))(bkeys),
+        "final_norm": init_norm(cfg, dtype),
+        "head": dense_init(ks[2], (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+
+
+def rwkv_forward(params, tokens, cfg, *, remat: bool = True,
+                 collect_state: bool = False, state=None,
+                 last_only: bool = False):
+    """tokens (B,S) -> (logits, aux=0, states|None)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+    x = apply_norm_params(cfg, params["ln_in"], x)
+    if state is None:
+        state = {"tm_prev": None, "cm_prev": None, "s": None}
+
+    def body(x, inp):
+        bp, tm_prev, cm_prev, s0 = inp
+        xin = apply_norm_params(cfg, bp["ln1"], x)
+        y, (tm_last, s_final) = time_mix_forward(bp["mix"], xin, cfg,
+                                                 prev_tok=tm_prev, s0=s0)
+        x = x + y
+        xin2 = apply_norm_params(cfg, bp["ln2"], x)
+        y, cm_last = channel_mix_forward(bp["mix"], xin2, cfg, prev_tok=cm_prev)
+        out = (tm_last, cm_last, s_final) if collect_state else None
+        from repro.dist.sharding import logical_constraint
+        return logical_constraint(x + y, "batch", None, None), out
+
+    xs = (params["blocks"], state["tm_prev"], state["cm_prev"], state["s"])
+    if state["tm_prev"] is None:
+        # no incoming state: scan only over block params
+        def body0(x, bp):
+            return body(x, (bp, None, None, None))
+        b = jax.checkpoint(body0, prevent_cse=False) if remat else body0
+        x, outs = _scan(b, x, params["blocks"])
+    else:
+        b = jax.checkpoint(body, prevent_cse=False) if remat else body
+        x, outs = _scan(b, x, xs)
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    logits = lm_head(params, x, cfg)
+    if collect_state:
+        tm, cm, s = outs
+        return logits, jnp.float32(0), {"tm_prev": tm, "cm_prev": cm, "s": s}
+    return logits, jnp.float32(0), None
+
+
+def init_rwkv_state(cfg, batch: int, dtype):
+    nh, hk = r6_dims(cfg)
+    return {
+        "tm_prev": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+        "cm_prev": jnp.zeros((cfg.n_layers, batch, cfg.d_model), dtype),
+        "s": jnp.zeros((cfg.n_layers, batch, nh, hk, hk), jnp.float32),
+    }
+
+
+def rwkv_decode_step(params, state, tokens_t, pos, cfg):
+    x = tsl.embed_lookup(params["embed"], tokens_t)
+    x = apply_norm_params(cfg, params["ln_in"], x)
+
+    def body(x_t, inp):
+        bp, tm_prev, cm_prev, s = inp
+        xin = apply_norm_params(cfg, bp["ln1"], x_t)
+        y, tm_new, s = time_mix_decode(bp["mix"], xin, cfg, tm_prev, s)
+        x_t = x_t + y
+        xin2 = apply_norm_params(cfg, bp["ln2"], x_t)
+        y, cm_new = channel_mix_forward(bp["mix"], xin2, cfg, prev_tok=cm_prev)
+        return x_t + y, (tm_new, cm_new, s)
+
+    x, (tm, cm, s) = _scan(
+        body, x, (params["blocks"], state["tm_prev"], state["cm_prev"],
+                  state["s"]))
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return lm_head(params, x, cfg)[:, 0], {"tm_prev": tm, "cm_prev": cm, "s": s}

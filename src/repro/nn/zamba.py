@@ -1,0 +1,173 @@
+"""zamba2 hybrid LM: Mamba2 backbone + ONE shared attention block applied
+every ``attn_every`` layers (weight sharing — the arch's defining trick).
+
+Structure: n_groups = n_layers // attn_every groups of [attn_every mamba
+layers + shared-attn application], plus a remainder stack. Group params are
+stacked (G, k, ...) for a two-level scan; the shared attention block's weights
+are closed over (NOT scanned), so XLA sees a single copy.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tsl_api import ops as tsl
+
+from repro.nn import flags as _nn_flags
+
+
+def _scan(f, init, xs, **kw):
+    return jax.lax.scan(f, init, xs, unroll=_nn_flags.scan_unroll(), **kw)
+
+
+from .attention import attention_decode, attention_forward, init_attention
+from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
+from .lm import lm_head
+from .mamba2 import dims as m2_dims, init_mamba2, mamba2_decode, mamba2_forward
+
+
+def layout(cfg) -> tuple[int, int, int]:
+    """(n_groups, group_size, remainder)."""
+    k = cfg.attn_every
+    g = cfg.n_layers // k
+    return g, k, cfg.n_layers - g * k
+
+
+def _init_mamba_block(key, cfg, dtype):
+    return {
+        "norm": init_norm(cfg, dtype),
+        "mamba": init_mamba2(key, cfg, dtype),
+    }
+
+
+def init_zamba(key, cfg):
+    dtype = jnp.dtype(cfg.dtype)
+    g, k, rem = layout(cfg)
+    ks = split_keys(key, 6)
+    gkeys = jnp.stack(split_keys(ks[0], g * k)).reshape(g, k, -1)
+    params = {
+        "embed": embed_init(ks[1], (cfg.padded_vocab, cfg.d_model), dtype),
+        "groups": jax.vmap(jax.vmap(lambda kk: _init_mamba_block(kk, cfg, dtype)))(gkeys),
+        "shared_attn_norm": init_norm(cfg, dtype),
+        "shared_attn": init_attention(ks[2], cfg, dtype),
+        "final_norm": init_norm(cfg, dtype),
+        "head": dense_init(ks[3], (cfg.d_model, cfg.padded_vocab), dtype),
+    }
+    if rem:
+        rkeys = jnp.stack(split_keys(ks[4], rem))
+        params["rest"] = jax.vmap(lambda kk: _init_mamba_block(kk, cfg, dtype))(rkeys)
+    return params
+
+
+def _mamba_block_fwd(bp, x, cfg):
+    from repro.dist.sharding import logical_constraint
+    y, (h, conv) = mamba2_forward(bp["mamba"], apply_norm_params(cfg, bp["norm"], x), cfg)
+    return logical_constraint(x + y, "batch", None, None)
+
+
+def zamba_forward(params, tokens, cfg, *, remat: bool = True):
+    """tokens (B,S) -> (logits, aux=0, None)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+    positions = jnp.arange(x.shape[1])
+
+    def mamba_body(x, bp):
+        return _mamba_block_fwd(bp, x, cfg), None
+
+    def group_body(x, gp):
+        x, _ = _scan(mamba_body, x, gp)
+        h, _ = attention_forward(
+            params["shared_attn"],
+            apply_norm_params(cfg, params["shared_attn_norm"], x),
+            cfg, causal=True, positions=positions)
+        return x + h, None
+
+    gb = jax.checkpoint(group_body, prevent_cse=False) if remat else group_body
+    x, _ = _scan(gb, x, params["groups"])
+    if "rest" in params:
+        mb = jax.checkpoint(mamba_body, prevent_cse=False) if remat else mamba_body
+        x, _ = _scan(mb, x, params["rest"])
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return lm_head(params, x, cfg), jnp.float32(0), None
+
+
+def zamba_prefill(params, tokens, cfg, *, max_len: int):
+    """Full-sequence prefill collecting SSM states, conv tails and shared-attn
+    KV caches for decode continuation."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+    positions = jnp.arange(x.shape[1])
+
+    def mamba_body(x, bp):
+        y, (h, conv) = mamba2_forward(
+            bp["mamba"], apply_norm_params(cfg, bp["norm"], x), cfg)
+        return x + y, (h, conv)
+
+    def group_body(x, gp):
+        x, (h_g, conv_g) = _scan(mamba_body, x, gp)
+        h, (k, v) = attention_forward(
+            params["shared_attn"],
+            apply_norm_params(cfg, params["shared_attn_norm"], x),
+            cfg, causal=True, positions=positions)
+        return x + h, (h_g, conv_g, k, v)
+
+    x, (h, conv, k, v) = _scan(group_body, x, params["groups"])
+    pad = max_len - k.shape[3]
+    if pad > 0:
+        widths = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
+        k, v = jnp.pad(k, widths), jnp.pad(v, widths)
+    state = {"h": h, "conv": conv, "attn_k": k, "attn_v": v}
+    if "rest" in params:
+        x, (h_r, conv_r) = _scan(mamba_body, x, params["rest"])
+        state["h_rest"] = h_r
+        state["conv_rest"] = conv_r
+    x = apply_norm_params(cfg, params["final_norm"], x[:, -1:])
+    return lm_head(params, x, cfg)[:, 0], state
+
+
+def init_zamba_state(cfg, batch: int, max_len: int, dtype):
+    g, k, rem = layout(cfg)
+    d_in, nh, n, p_dim = m2_dims(cfg)
+    kw = cfg.conv_width
+    state = {
+        "h": jnp.zeros((g, k, batch, nh, p_dim, n), jnp.float32),
+        "conv": jnp.zeros((g, k, batch, kw - 1, d_in), dtype),
+        "attn_k": jnp.zeros((g, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+        "attn_v": jnp.zeros((g, batch, cfg.n_kv_heads, max_len, cfg.hd), dtype),
+    }
+    if rem:
+        state["h_rest"] = jnp.zeros((rem, batch, nh, p_dim, n), jnp.float32)
+        state["conv_rest"] = jnp.zeros((rem, batch, kw - 1, d_in), dtype)
+    return state
+
+
+def zamba_decode_step(params, state, tokens_t, pos, cfg):
+    x = tsl.embed_lookup(params["embed"], tokens_t)
+
+    def mamba_step(x_t, inp):
+        bp, h, conv = inp
+        y, h, conv = mamba2_decode(bp["mamba"],
+                                   apply_norm_params(cfg, bp["norm"], x_t),
+                                   cfg, h, conv)
+        return x_t + y, (h, conv)
+
+    def group_step(x_t, inp):
+        gp, h_g, conv_g, kc, vc = inp
+        x_t, (h_g, conv_g) = _scan(mamba_step, x_t, (gp, h_g, conv_g))
+        a, kc, vc = attention_decode(
+            params["shared_attn"],
+            apply_norm_params(cfg, params["shared_attn_norm"], x_t),
+            kc, vc, pos, cfg)
+        return x_t + a, (h_g, conv_g, kc, vc)
+
+    x, (h, conv, kc, vc) = _scan(
+        group_step, x,
+        (params["groups"], state["h"], state["conv"],
+         state["attn_k"], state["attn_v"]))
+    new_state = {"h": h, "conv": conv, "attn_k": kc, "attn_v": vc}
+    if "rest" in params:
+        x, (h_r, conv_r) = _scan(
+            mamba_step, x, (params["rest"], state["h_rest"], state["conv_rest"]))
+        new_state["h_rest"] = h_r
+        new_state["conv_rest"] = conv_r
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return lm_head(params, x, cfg)[:, 0], new_state

@@ -1,0 +1,110 @@
+"""AdamW with optional int8-quantized moments (distributed-optimization trick:
+8-bit optimizer state cuts the per-chip HBM for arctic-480b train from
+~18.8 GB to ~8.4 GB — the difference between not fitting and fitting v5e;
+EXPERIMENTS.md §Dry-run quantifies this).
+
+No optax dependency — the optimizer is part of the substrate we must build.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    moment_dtype: str = "float32"      # "float32" | "int8"
+
+
+def lr_at(cfg: OptConfig, step):
+    """Linear warmup + cosine decay."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+# -- int8 moment quantization (per-row absmax scaling) ------------------------
+
+def _quantize(x):
+    ax = -1 if x.ndim >= 1 else None
+    amax = jnp.max(jnp.abs(x), axis=ax, keepdims=True) if x.ndim >= 1 else jnp.abs(x)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def _dequantize(qs):
+    return qs["q"].astype(jnp.float32) * qs["scale"]
+
+
+def init_opt_state(cfg: OptConfig, params):
+    def zeros(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if cfg.moment_dtype == "int8":
+            return _quantize(z)
+        return z
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def apply_updates(cfg: OptConfig, params, grads, opt_state):
+    """One AdamW step. Returns (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = lr_at(cfg, opt_state["count"])
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+    quant = cfg.moment_dtype == "int8"
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_f = _dequantize(m) if quant else m
+        v_f = _dequantize(v) if quant else v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        update = (m_f / b1c) / (jnp.sqrt(v_f / b2c) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled wd on matrices only
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * update).astype(p.dtype)
+        return new_p, (_quantize(m_f) if quant else m_f), \
+            (_quantize(v_f) if quant else v_f)
+
+    is_q = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}, \
+        {"grad_norm": gnorm, "lr": lr}

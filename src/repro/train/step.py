@@ -1,0 +1,72 @@
+"""Train-step builder: loss + grad + AdamW update, with optional microbatch
+gradient accumulation (scan) and int8 error-feedback gradient compression.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.model import Model
+
+from . import optimizer as opt_mod
+from .optimizer import OptConfig
+
+
+def make_train_step(model: Model, opt_cfg: OptConfig, *,
+                    microbatches: int = 1, compress_grads: bool = False,
+                    mesh=None):
+    """Returns train_step(train_state, batch) -> (train_state, metrics).
+
+    train_state = {"params", "opt"}; batch = {"tokens", "labels", ...}.
+    """
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat=True)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+        # split the leading batch dim into microbatches and scan-accumulate
+        def reshape(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        mb = jax.tree.map(reshape, batch)
+
+        def body(acc, micro):
+            (loss, metrics), grads = grad_fn(params, micro)
+            acc_g, acc_l = acc
+            acc_g = jax.tree.map(jnp.add, acc_g, grads)
+            return (acc_g, acc_l + loss), metrics
+
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss_sum), metrics = jax.lax.scan(body, (zero_g, 0.0), mb)
+        grads = jax.tree.map(lambda g: g / microbatches, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / microbatches, metrics, grads
+
+    def train_step(train_state, batch):
+        params, opt_state = train_state["params"], train_state["opt"]
+        loss, metrics, grads = compute_grads(params, batch)
+        if compress_grads:
+            from repro.dist.compression import compress_decompress
+            grads, cerr = compress_decompress(grads)
+            metrics = {**metrics, "compress_err": cerr}
+        new_params, new_opt, opt_metrics = opt_mod.apply_updates(
+            opt_cfg, params, grads, opt_state)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, **metrics, **opt_metrics})
+
+    return train_step
+
+
+def init_train_state(model: Model, opt_cfg: OptConfig, key):
+    params = model.init(key)
+    return {"params": params, "opt": opt_mod.init_opt_state(opt_cfg, params)}

@@ -1,0 +1,42 @@
+"""Framework-facing TSL access point.
+
+Every higher layer (nn/, train/, serve/) calls vector primitives ONLY through
+this module, so switching execution dialect = regenerating the library
+(``REPRO_TSL_TARGET=pallas_interpret`` etc.) — the paper's portability claim,
+upheld structurally.
+"""
+
+from __future__ import annotations
+
+import os
+from types import ModuleType
+
+from repro.core import load_library
+
+_lib: ModuleType | None = None
+
+
+def lib(force: bool = False) -> ModuleType:
+    global _lib
+    if _lib is None or force:
+        _lib = load_library(os.environ.get("REPRO_TSL_TARGET", "auto"))
+    return _lib
+
+
+class _OpsProxy:
+    """Late-bound proxy so `from repro.tsl_api import ops` works before the
+    library is generated (first attribute access triggers generation)."""
+
+    def __getattr__(self, name: str):
+        return getattr(lib().ops, name)
+
+
+ops = _OpsProxy()
+
+
+def target_name() -> str:
+    return lib().TARGET_NAME
+
+
+def cost(primitive: str, term: str, **shapes) -> float:
+    return lib().cost(primitive, term, **shapes)

@@ -1,0 +1,25 @@
+import pytest
+
+# NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
+# single real CPU device; only launch/dryrun.py forces 512 host devices.
+
+
+@pytest.fixture(scope="session")
+def lib_cpu():
+    from repro.core import load_library
+
+    return load_library("cpu_xla")
+
+
+@pytest.fixture(scope="session")
+def lib_interp():
+    from repro.core import load_library
+
+    return load_library("pallas_interpret")
+
+
+@pytest.fixture(scope="session")
+def host_mesh():
+    import jax
+
+    return jax.make_mesh((1, 1), ("data", "model"))

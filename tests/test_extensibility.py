@@ -1,0 +1,143 @@
+"""Extensibility case study (paper §5.3, FPGA -> here: a simulated Trainium-
+like target added purely via UPD files in an extra search path) + the LOC
+accounting the paper reports (19 schema/template lines -> here ZERO core
+lines; ~100 UPD lines -> generated library)."""
+
+import textwrap
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+TRN_TARGET = """\
+---
+name: "trn_sim"
+vendor: "sim"
+description: "Simulated Trainium-like target: NKI-ish tile geometry."
+lscpu_flags: ["xla", "trn", "pe_array"]
+ctypes: ["float32", "bfloat16"]
+default_ctype: "float32"
+lanes: 128
+sublanes: 32
+mxu: [128, 128]
+vmem_bytes: 25165824
+hbm_bytes: 34359738368
+peak_flops_bf16: 9.5e+13
+hbm_bw: 4.0e+11
+ici_bw: 2.0e+10
+ici_links: 4
+interpret: false
+runs_on_host: true
+...
+"""
+
+TRN_PRIMS = """\
+---
+primitive_name: "trn_scale_add"
+group: "trn"
+brief: "saxpy-like fused op exercising the new target."
+parameters:
+  - {name: "a", ctype: "register"}
+  - {name: "b", ctype: "register"}
+  - {name: "alpha", ctype: "scalar", default: "1.0"}
+returns: {ctype: "register"}
+definitions:
+  - target_extension: "trn_sim"
+    ctype: ["float32", "bfloat16"]
+    lscpu_flags: ["xla", "trn"]
+    implementation: |
+      return a * jnp.asarray(alpha, a.dtype) + b
+testing:
+  - name: "saxpy"
+    requires: []
+    implementation: |
+      a = ctx.array((4, 8), ctype)
+      b = ctx.array((4, 8), ctype)
+      ctx.allclose(ops.trn_scale_add(a, b, alpha=2.0),
+                   2 * np.asarray(a, np.float64) + np.asarray(b, np.float64),
+                   ctype, scale=4.0)
+...
+"""
+
+
+@pytest.fixture(scope="module")
+def trn_upd(tmp_path_factory):
+    root = tmp_path_factory.mktemp("trn_upd")
+    (root / "targets").mkdir()
+    (root / "primitives").mkdir()
+    (root / "targets" / "trn_sim.yaml").write_text(TRN_TARGET)
+    (root / "primitives" / "trn.yaml").write_text(TRN_PRIMS)
+    return root
+
+
+def test_new_target_via_pure_data(trn_upd):
+    """Integrating a brand-new target requires ZERO generator-code changes —
+    stronger than the paper's 19-LOC schema/template change."""
+    from repro.core import load_library
+
+    lib = load_library("trn_sim", upd_paths=(str(trn_upd),))
+    assert lib.TARGET_NAME == "trn_sim"
+    # existing portable primitives that list trn? none -> only trn group +
+    # any multi-target prims; the new primitive must exist and work:
+    a = jnp.ones((2, 4), jnp.float32)
+    b = jnp.zeros((2, 4), jnp.float32)
+    out = lib.ops.trn_scale_add(a, b, alpha=3.0)
+    np.testing.assert_allclose(np.asarray(out), 3.0)
+
+
+def test_existing_primitives_can_target_new_sru(trn_upd, tmp_path):
+    """Point an EXISTING primitive at the new target from the extension path
+    (the paper's '7 primitives, 100 LOC' FPGA exercise)."""
+    extra = tmp_path / "upd2"
+    (extra / "targets").mkdir(parents=True)
+    (extra / "primitives").mkdir()
+    (extra / "targets" / "trn_sim.yaml").write_text(TRN_TARGET)
+    (extra / "primitives" / "trn.yaml").write_text(TRN_PRIMS + textwrap.dedent("""\
+    ---
+    primitive_name: "hadd_trn"
+    group: "trn"
+    brief: "hadd for the trn target (paper Fig 11 exercise)."
+    parameters:
+      - {name: "value", ctype: "register"}
+    returns: {ctype: "register"}
+    definitions:
+      - target_extension: "trn_sim"
+        ctype: ["float32"]
+        lscpu_flags: ["xla", "trn", "pe_array"]
+        implementation: |
+          n = value.shape[-1]
+          p = 1 << max(1, (n - 1)).bit_length()
+          if p != n:
+              value = jnp.pad(value, [(0, 0)] * (value.ndim - 1) + [(0, p - n)])
+          while value.shape[-1] > 1:
+              half = value.shape[-1] // 2
+              value = value[..., :half] + value[..., half:]
+          return value[..., 0]
+    testing:
+      - name: "sums"
+        requires: []
+        implementation: |
+          v = ctx.array((3, 20), ctype, -2, 2)
+          ctx.allclose(ops.hadd_trn(v), np.asarray(v, np.float64).sum(-1), ctype, scale=32.0)
+    ...
+    """))
+    from repro.core import load_library
+
+    lib = load_library("trn_sim", upd_paths=(str(extra),))
+    v = jnp.asarray(np.arange(20, dtype=np.float32))
+    assert float(lib.ops.hadd_trn(v)) == float(np.arange(20).sum())
+
+
+def test_loc_accounting(trn_upd):
+    """Paper §5.3 metric: UPD lines written vs generated library lines."""
+    from repro.core import GenConfig, generate_library
+
+    upd_lines = sum(len(f.read_text().splitlines())
+                    for f in trn_upd.rglob("*.yaml"))
+    pkg_dir, _ = generate_library(
+        GenConfig(target="trn_sim", upd_paths=(str(trn_upd),)), force=True)
+    gen_lines = sum(len(f.read_text().splitlines())
+                    for f in pkg_dir.rglob("*.py"))
+    assert upd_lines < 120
+    assert gen_lines > upd_lines          # generation amplifies

@@ -1,0 +1,119 @@
+"""Generator-core unit tests: schema, validation GPO, pipeline mechanics."""
+
+import pytest
+
+from repro.core import GenConfig, GenerationError, core_pipeline
+from repro.core.model import Context
+from repro.core.pipeline import Pipeline, TemplateCheckGPO
+from repro.core.schema import Entry, PRIMITIVE_SCHEMA, Schema, TARGET_SCHEMA
+from repro.core.validate import ValidateGPO
+
+
+def test_schema_mandatory_missing():
+    s = Schema("t", (Entry("a", "str", mandatory=True),))
+    out, errs, warns = s.apply({})
+    assert errs and "mandatory" in errs[0]
+
+
+def test_schema_defaults_enrich():
+    s = Schema("t", (Entry("a", "str", mandatory=True),
+                     Entry("b", "int", default=7)))
+    out, errs, _ = s.apply({"a": "x"})
+    assert not errs and out["b"] == 7
+
+
+def test_schema_type_errors_reported_not_thrown():
+    s = Schema("t", (Entry("a", "int", mandatory=True),))
+    out, errs, _ = s.apply({"a": "not-an-int"})
+    assert errs and "expected int" in errs[0]
+
+
+def test_schema_extra_fields_pass_through_with_warning():
+    """Paper ⑥: arbitrary additional fields are allowed."""
+    s = Schema("t", (Entry("a", "str", default=""),))
+    out, errs, warns = s.apply({"zzz": 1})
+    assert not errs and out["zzz"] == 1
+    assert any("extra field" in w for w in warns)
+
+
+def test_schema_composed_list_paths_in_errors():
+    out, errs, _ = PRIMITIVE_SCHEMA.apply({
+        "primitive_name": "p",
+        "definitions": [{"ctype": ["float32"], "implementation": "pass"}],
+    })
+    assert any("definitions[0].target_extension" in e for e in errs)
+
+
+def test_bool_is_not_int():
+    s = Schema("t", (Entry("a", "int", mandatory=True),))
+    _, errs, _ = s.apply({"a": True})
+    assert errs
+
+
+def test_validate_gpo_rejects_unknown_target_reference():
+    ctx = Context(config=GenConfig(target="cpu_xla"))
+    ctx.raw_targets = [{"name": "cpu_xla", "lscpu_flags": ["xla"],
+                        "ctypes": ["float32"]}]
+    ctx.raw_primitives = [{
+        "primitive_name": "p", "group": "g",
+        "definitions": [{"target_extension": "nonexistent",
+                         "ctype": ["float32"], "implementation": "pass"}],
+    }]
+    ValidateGPO().run(ctx)
+    assert any("unknown" in e and "nonexistent" in e for e in ctx.errors)
+
+
+def test_validate_gpo_warns_on_untested_primitive():
+    ctx = Context(config=GenConfig(target="cpu_xla"))
+    ctx.raw_targets = [{"name": "cpu_xla", "lscpu_flags": ["xla"],
+                        "ctypes": ["float32"]}]
+    ctx.raw_primitives = [{
+        "primitive_name": "p", "group": "g",
+        "definitions": [{"target_extension": "cpu_xla",
+                         "ctype": ["float32"], "implementation": "return 1"}],
+    }]
+    ValidateGPO().run(ctx)
+    assert any("no test cases" in w for w in ctx.warnings)
+
+
+def test_pipeline_is_exchangeable():
+    """Paper ①: GPOs remain exchangeable / pipeline can be altered."""
+    config = GenConfig(target="cpu_xla")
+    pipe = core_pipeline(config)
+    names = pipe.names()
+    assert names[:4] == ["template-check", "validate", "select", "generate"]
+
+    class NoopGPO:
+        name = "noop"
+
+        def run(self, ctx):
+            ctx.meta["noop_ran"] = True
+            return ctx
+
+    pipe.insert_after("select", NoopGPO())
+    assert "noop" in pipe.names()
+    ctx = pipe.run(config)
+    assert ctx.meta["noop_ran"]
+
+
+def test_pipeline_replace_unknown_raises():
+    pipe = Pipeline([TemplateCheckGPO()])
+    with pytest.raises(KeyError):
+        pipe.replace("nope", TemplateCheckGPO())
+
+
+def test_full_pipeline_fails_on_bad_target():
+    with pytest.raises(GenerationError):
+        core_pipeline(GenConfig(target="not-a-target")).run(
+            GenConfig(target="not-a-target"))
+
+
+def test_target_schema_accepts_real_files():
+    from repro.core import loader
+
+    docs = loader.load_raw_targets()
+    assert len(docs) >= 4
+    for d in docs:
+        d = {k: v for k, v in d.items() if not k.startswith("__")}
+        _, errs, _ = TARGET_SCHEMA.apply(d)
+        assert not errs, errs

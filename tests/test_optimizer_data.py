@@ -1,0 +1,144 @@
+"""Optimizer, schedule, compression, and data-pipeline tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.train.optimizer import OptConfig, apply_updates, init_opt_state, lr_at
+
+
+def _quad_problem():
+    target = jnp.asarray(np.random.default_rng(0).normal(size=(8, 8)),
+                         jnp.float32)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    return loss, params
+
+
+@pytest.mark.parametrize("moment_dtype", ["float32", "int8"])
+def test_adamw_converges_on_quadratic(moment_dtype):
+    loss, params = _quad_problem()
+    cfg = OptConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                    total_steps=200, moment_dtype=moment_dtype)
+    opt = init_opt_state(cfg, params)
+    l0 = float(loss(params))
+    for _ in range(150):
+        g = jax.grad(loss)(params)
+        params, opt, _ = apply_updates(cfg, params, g, opt)
+    assert float(loss(params)) < l0 * 0.01
+
+
+def test_int8_moments_track_f32_trajectory():
+    loss, params = _quad_problem()
+    trajs = {}
+    for md in ("float32", "int8"):
+        cfg = OptConfig(lr=0.05, weight_decay=0.0, warmup_steps=1,
+                        total_steps=100, moment_dtype=md)
+        p = jax.tree.map(jnp.copy, params)
+        opt = init_opt_state(cfg, p)
+        for _ in range(40):
+            g = jax.grad(loss)(p)
+            p, opt, _ = apply_updates(cfg, p, g, opt)
+        trajs[md] = float(loss(p))
+    assert abs(trajs["int8"] - trajs["float32"]) < 0.1 * (trajs["float32"] + 1e-3) + 5e-3
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_at(cfg, 0)) < 0.2
+    assert abs(float(lr_at(cfg, 10)) - 1.0) < 0.05
+    assert float(lr_at(cfg, 99)) < 0.2
+    assert float(lr_at(cfg, 99)) >= 0.1 * 0.9
+
+
+def test_grad_clip_bounds_update():
+    cfg = OptConfig(lr=1.0, grad_clip=1.0, weight_decay=0.0, warmup_steps=1,
+                    total_steps=10)
+    params = {"w": jnp.zeros((4,), jnp.float32)}
+    opt = init_opt_state(cfg, params)
+    huge = {"w": jnp.full((4,), 1e6, jnp.float32)}
+    _, _, metrics = apply_updates(cfg, params, huge, opt)
+    assert float(metrics["grad_norm"]) > 1e5   # reported pre-clip
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=4,
+                max_size=64))
+def test_compression_relative_error_bounded(xs):
+    """int8 absmax quantization: error per row bounded by scale/2 ~= amax/254."""
+    from repro.dist.compression import compress_decompress
+
+    g = {"w": jnp.asarray(np.array(xs, np.float32)[None, :])}
+    out, err = compress_decompress(g)
+    amax = max(abs(x) for x in xs)
+    bound = (amax / 127.0) * 0.51 + 1e-6
+    diff = np.abs(np.asarray(out["w"]) - np.asarray(g["w"])).max()
+    assert diff <= bound
+
+
+def test_error_feedback_residual_identity():
+    """g_quantized + residual == g + residual_in (lossless bookkeeping)."""
+    from repro.dist.compression import ErrorFeedback
+
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(16,)),
+                          jnp.float32)}
+    res = ErrorFeedback.init(g)
+    out, new_res = ErrorFeedback.apply(g, res)
+    np.testing.assert_allclose(np.asarray(out["w"]) + np.asarray(new_res["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+
+
+# -- data pipeline ------------------------------------------------------------
+
+def test_synthetic_deterministic_and_restart_safe():
+    from repro.data.pipeline import SyntheticTokens
+
+    s1 = SyntheticTokens(1000, 4, 16, seed=7)
+    s2 = SyntheticTokens(1000, 4, 16, seed=7)
+    b1, b2 = s1.batch_at(5), s2.batch_at(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(s1.batch_at(6)["tokens"], b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_shards_differ():
+    from repro.data.pipeline import SyntheticTokens
+
+    a = SyntheticTokens(1000, 8, 16, seed=7, shard=0, n_shards=2).batch_at(0)
+    b = SyntheticTokens(1000, 8, 16, seed=7, shard=1, n_shards=2).batch_at(0)
+    assert a["tokens"].shape == (4, 16)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_prefetcher_orders_batches():
+    from repro.data.pipeline import DataState, Prefetcher, SyntheticTokens
+
+    src = SyntheticTokens(1000, 2, 8, seed=3)
+    state = DataState(step=4)
+    pf = Prefetcher(src, state, depth=2)
+    got = pf.get()
+    np.testing.assert_array_equal(got["tokens"], src.batch_at(4)["tokens"])
+    got2 = pf.get()
+    np.testing.assert_array_equal(got2["tokens"], src.batch_at(5)["tokens"])
+    assert state.step == 6
+    pf.stop()
+
+
+def test_memmap_dataset(tmp_path):
+    from repro.data.pipeline import MemmapTokens
+
+    data = np.arange(10_000, dtype=np.uint16) % 500
+    f = tmp_path / "tokens.bin"
+    data.tofile(f)
+    ds = MemmapTokens(f, batch=4, seq=32, seed=0)
+    b = ds.batch_at(0)
+    assert b["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+    assert (b["tokens"] < 500).all()

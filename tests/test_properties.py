@@ -1,0 +1,138 @@
+"""Hypothesis property tests on system invariants (task brief deliverable (c))."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.schema import Entry, Schema
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.dictionaries(st.sampled_from(["a", "b", "c", "zz"]),
+                       st.one_of(st.text(max_size=5), st.integers(), st.booleans())))
+def test_schema_apply_idempotent(doc):
+    """Enrichment is a fixpoint: apply(apply(doc)) == apply(doc)."""
+    s = Schema("t", (Entry("a", "str", default="x"),
+                     Entry("b", "int", default=3)))
+    out1, errs1, _ = s.apply(doc)
+    if errs1:
+        return
+    out2, errs2, _ = s.apply(out1)
+    assert not errs2
+    assert out1 == out2
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32,
+                          allow_subnormal=False),   # TPUs/XLA flush denormals
+                min_size=1, max_size=300),
+       st.floats(-100, 100, allow_nan=False),
+       st.floats(-100, 100, allow_nan=False))
+def test_range_count_matches_numpy(xs, lo, hi):
+    from repro.kernels.range_count import ops
+
+    lo, hi = min(lo, hi), max(lo, hi)
+    d = jnp.asarray(np.array(xs, np.float32))
+    got = int(ops.range_count(d, lo, hi, interpret=True))
+    arr = np.array(xs, np.float32)
+    want = int(((arr >= np.float32(lo)) & (arr <= np.float32(hi))).sum())
+    assert got == want
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 31), st.integers(1, 20), st.integers(0, 2**31 - 1))
+def test_to_integral_bit_exact(n, rows, seed):
+    from repro.kernels.to_integral import ref
+
+    rng = np.random.default_rng(seed)
+    m = rng.random((rows, n)) > 0.5
+    got = np.asarray(ref.to_integral(jnp.asarray(m)))
+    want = np.zeros(rows, np.uint32)
+    for i in range(n):
+        want |= m[:, i].astype(np.uint32) << np.uint32(i)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 500), st.integers(0, 2**31 - 1))
+def test_hadd_matches_numpy(rows, cols, seed):
+    from repro.kernels.hadd import ops
+
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(rows, cols)).astype(np.float32)
+    got = np.asarray(ops.hadd(jnp.asarray(v), interpret=True))
+    np.testing.assert_allclose(got, v.sum(-1), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 64), seed=st.integers(0, 2**31 - 1))
+def test_softmax_rows_sum_to_one(lib_cpu, n, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(3, n)) * 5, jnp.float32)
+    p = np.asarray(lib_cpu.ops.softmax(x), np.float64)
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert (p >= 0).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(tokens_pow=st.integers(1, 6), experts_pow=st.integers(1, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_moe_dispatch_combine_partition_of_unity(lib_cpu, tokens_pow,
+                                                 experts_pow, seed):
+    """With identity experts and ample capacity, dispatch+combine == identity
+    (combine weights are a partition of unity)."""
+    t, e = 2 ** tokens_pow, 2 ** min(experts_pow, 3)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(t, 4)), jnp.float32)
+    logits = jnp.asarray(rng.normal(size=(t, e)), jnp.float32)
+    k = min(2, e)
+    w, idx = lib_cpu.ops.topk_gating(logits, k=k)
+    xe, info = lib_cpu.ops.moe_dispatch(x, idx, w, n_experts=e,
+                                        capacity=t * k)
+    y = lib_cpu.ops.moe_combine(xe, info)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=2e-5,
+                               atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_rope_preserves_norm_and_is_relative(lib_cpu, seed):
+    """RoPE invariants: norm preservation + relative-position property
+    <q_m, k_n> depends only on (m - n)."""
+    rng = np.random.default_rng(seed)
+    d = 16
+    q = rng.normal(size=(d,)).astype(np.float32)
+    k = rng.normal(size=(d,)).astype(np.float32)
+
+    def rot(x, pos):
+        ang = pos * (10000.0 ** (-np.arange(d // 2) / (d // 2)))
+        cos = jnp.asarray(np.cos(ang), jnp.float32)[None]
+        sin = jnp.asarray(np.sin(ang), jnp.float32)[None]
+        return np.asarray(lib_cpu.ops.rope_apply(jnp.asarray(x)[None], cos, sin))[0]
+
+    np.testing.assert_allclose(np.linalg.norm(rot(q, 3)), np.linalg.norm(q),
+                               rtol=1e-5)
+    dot_a = rot(q, 5) @ rot(k, 2)
+    dot_b = rot(q, 13) @ rot(k, 10)
+    np.testing.assert_allclose(dot_a, dot_b, rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2**31 - 1))
+def test_ssd_state_linearity(t, seed):
+    """The SSD recurrence is linear in x: y(x1+x2) = y(x1) + y(x2)."""
+    from repro.kernels.ssd import ref
+
+    rng = np.random.default_rng(seed)
+    B, H, P, N = 1, 2, 4, 3
+    x1 = jnp.asarray(rng.normal(size=(B, t, H, P)), jnp.float32)
+    x2 = jnp.asarray(rng.normal(size=(B, t, H, P)), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.8, 0.99, (B, t, H)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(B, t, N)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(B, t, N)), jnp.float32)
+    y1, _ = ref.ssd_scan(x1, a, b, c)
+    y2, _ = ref.ssd_scan(x2, a, b, c)
+    y12, _ = ref.ssd_scan(x1 + x2, a, b, c)
+    np.testing.assert_allclose(np.asarray(y12), np.asarray(y1) + np.asarray(y2),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,86 @@
+"""Sharding-rule unit tests (no 512-device env needed: rules are pure)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _sds(shape, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct stand-in — NEVER allocate multi-GiB test params."""
+    return jax.ShapeDtypeStruct(shape, dtype)
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding
+
+
+class _FakeMesh:
+    """Shape-only stand-in so rules can be tested against the production mesh
+    geometry without 512 devices."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape, dtype=object)
+        self.axis_sizes = shape
+
+
+def test_param_rules_production_geometry():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    params = {
+        "embed": _sds((64000, 7168)),
+        "blocks": {
+            "attn": {"wq": _sds((60, 7168, 7168)),
+                     "wo": _sds((60, 7168, 7168))},
+            "moe": {"w_gate": _sds((35, 128, 7168, 4864))},
+            "attn_norm": {"w": _sds((60, 7168))},
+        },
+        "head": _sds((7168, 64000)),
+    }
+    specs = sharding.param_specs(mesh, params)
+    assert specs["embed"] == P("model", "data")
+    assert specs["blocks"]["attn"]["wq"] == P(None, "data", "model")
+    assert specs["blocks"]["attn"]["wo"] == P(None, "model", "data")
+    assert specs["blocks"]["moe"]["w_gate"] == P(None, None, "data", "model")
+    assert specs["blocks"]["attn_norm"]["w"] == P()          # 1D replicated
+    assert specs["head"] == P("data", "model")
+
+
+def test_param_rules_multipod_folds_dp():
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    params = {"head": _sds((12288, 32768))}
+    specs = sharding.param_specs(mesh, params)
+    assert specs["head"] == P(("pod", "data"), "model")
+
+
+def test_tiny_dims_not_oversharded():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    params = {"wq": _sds((8, 4))}   # smaller than mesh
+    specs = sharding.param_specs(mesh, params)
+    assert specs["wq"] == P(None, None)
+
+
+def test_state_specs_kv_cache_sequence_parallel():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    state = {"k": _sds((60, 128, 8, 32768, 128)),
+             "v": _sds((60, 128, 8, 32768, 128))}
+    specs = sharding.state_specs(mesh, state)
+    assert specs["k"] == P(None, "data", None, "model", None)
+
+
+def test_state_specs_batch1_keeps_seq_sharding():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    state = {"k": _sds((81, 1, 32, 524288, 112))}
+    specs = sharding.state_specs(mesh, state)
+    # batch of 1 cannot shard on data; sequence still shards on model
+    assert specs["k"] == P(None, None, None, "model", None)
+
+
+def test_batch_spec_divisibility():
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    assert sharding.batch_spec(mesh, 256) == P("data", None)
+    assert sharding.batch_spec(mesh, 1) == P(None)
+
+
+def test_logical_constraint_noop_without_mesh():
+    x = jnp.zeros((4, 8))
+    y = sharding.logical_constraint(x, "batch", None)
+    assert y.shape == x.shape
