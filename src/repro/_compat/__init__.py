@@ -1,0 +1,5 @@
+"""Compatibility shims for dependencies the runtime may lack.
+
+Import the submodule for the dependency you need gated; each registers
+itself in ``sys.modules`` only when the real package is absent.
+"""

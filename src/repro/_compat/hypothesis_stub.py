@@ -1,0 +1,202 @@
+"""Minimal, deterministic stand-in for `hypothesis` (property-based testing).
+
+The test suite uses a small slice of hypothesis' API: ``@settings``,
+``@given`` and a handful of strategies. When the real package is installed it
+is always preferred (this module registers itself in ``sys.modules`` ONLY if
+``import hypothesis`` fails), so CI with pinned deps runs real hypothesis
+while minimal containers still execute every property test with seeded
+pseudo-random sampling instead of erroring at collection.
+
+Semantic differences vs real hypothesis: no shrinking, no example database,
+no health checks — just ``max_examples`` draws from a per-test deterministic
+RNG. That keeps the properties exercised and the suite reproducible.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+import string
+import sys
+import types
+import zlib
+
+__version__ = "0.0-repro-stub"
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+    def map(self, fn):
+        return SearchStrategy(lambda rng: fn(self.draw(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self.draw(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied (stub)")
+
+        return SearchStrategy(draw)
+
+
+# -- strategies ---------------------------------------------------------------
+
+def integers(min_value=-(2 ** 31), max_value=2 ** 31 - 1):
+    return SearchStrategy(lambda rng: rng.randint(int(min_value), int(max_value)))
+
+
+def floats(min_value=None, max_value=None, *, allow_nan=None, allow_infinity=None,
+           width=64, allow_subnormal=None):
+    lo = -1e9 if min_value is None else float(min_value)
+    hi = 1e9 if max_value is None else float(max_value)
+
+    def draw(rng):
+        # mix uniform draws with boundary values, like hypothesis favors edges
+        r = rng.random()
+        if r < 0.05:
+            return lo
+        if r < 0.10:
+            return hi
+        if r < 0.15 and lo <= 0.0 <= hi:
+            return 0.0
+        return rng.uniform(lo, hi)
+
+    return SearchStrategy(draw)
+
+
+def booleans():
+    return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+
+def text(alphabet=string.ascii_letters, *, min_size=0, max_size=10):
+    chars = list(alphabet)
+
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return "".join(rng.choice(chars) for _ in range(n))
+
+    return SearchStrategy(draw)
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return SearchStrategy(lambda rng: rng.choice(elements))
+
+
+def lists(elements, *, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(n)]
+
+    return SearchStrategy(draw)
+
+
+def frozensets(elements, *, min_size=0, max_size=10):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return frozenset(elements.draw(rng) for _ in range(n))
+
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies):
+    return SearchStrategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+
+def dictionaries(keys, values, *, min_size=0, max_size=8):
+    def draw(rng):
+        n = rng.randint(min_size, max_size)
+        return {keys.draw(rng): values.draw(rng) for _ in range(n)}
+
+    return SearchStrategy(draw)
+
+
+def one_of(*strategies):
+    if len(strategies) == 1 and isinstance(strategies[0], (list, tuple)):
+        strategies = tuple(strategies[0])
+    return SearchStrategy(lambda rng: rng.choice(strategies).draw(rng))
+
+
+def just(value):
+    return SearchStrategy(lambda rng: value)
+
+
+def none():
+    return just(None)
+
+
+# -- decorators ---------------------------------------------------------------
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Order-insensitive with @given: records max_examples on the function."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        sig = inspect.signature(fn)
+        names = list(sig.parameters)
+        # hypothesis maps positional strategies onto the RIGHTMOST parameters
+        pos_names = names[len(names) - len(arg_strategies):] if arg_strategies else []
+        strategy_map = dict(zip(pos_names, arg_strategies))
+        strategy_map.update(kw_strategies)
+        fixture_names = [n for n in names if n not in strategy_map]
+
+        def wrapper(**fixture_kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = random.Random(seed)
+            for _ in range(n):
+                drawn = {k: s.draw(rng) for k, s in strategy_map.items()}
+                fn(**fixture_kwargs, **drawn)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        if hasattr(fn, "_stub_max_examples"):
+            wrapper._stub_max_examples = fn._stub_max_examples
+        # pytest reads the signature for fixture injection: expose ONLY the
+        # non-strategy parameters
+        wrapper.__signature__ = inspect.Signature(
+            [sig.parameters[n] for n in fixture_names])
+        return wrapper
+
+    return deco
+
+
+def _register() -> bool:
+    """Install the stub as `hypothesis` if the real package is missing."""
+    try:
+        import hypothesis  # noqa: F401
+
+        return False
+    except ImportError:
+        pass
+    mod = types.ModuleType("hypothesis")
+    mod.__version__ = __version__
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = types.ModuleType("hypothesis.strategies")
+    for name in ("SearchStrategy", "integers", "floats", "booleans", "text",
+                 "sampled_from", "lists", "frozensets", "tuples",
+                 "dictionaries", "one_of", "just", "none"):
+        setattr(mod.strategies, name, globals()[name])
+    mod.HealthCheck = types.SimpleNamespace(all=lambda: [])
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+    return True

@@ -174,8 +174,9 @@ class GenerateGPO:
         any_sel = next(iter(sels.values()))
         dispatch_arg = prim.dispatch_param()
         default_ct = ctx.targets[any_sel.target].default_ctype
-        if dispatch_arg is None and default_ct not in table:
-            # fall back to any available specialization
+        if default_ct not in table:
+            # fall back to any available specialization (also the dispatch
+            # fallback slot, so it must always resolve)
             default_ct = next(iter(table))
         return {
             "name": prim.name,

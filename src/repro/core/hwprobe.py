@@ -1,34 +1,34 @@
 """Hardware probe (paper Fig 7a: ``cpuinfo.get_cpu_info()['flags']`` feeding
-``--targets``). Here: query the live JAX backend and map it to an SRU name +
-flag set. The generator can also be "tricked into assuming specific hardware"
+``--targets``). Here: query the live JAX backend and map it to an SRU name.
+The generator can also be "tricked into assuming specific hardware"
 (paper §4.1) by passing explicit flags — that is exactly how we generate the
-TPU library on this CPU-only container."""
+TPU library on this CPU-only container.
+
+``auto`` resolves into the UPD-defined SRU family (tsl_data/targets/):
+cpu_xla on CPU (and GPU, conservatively) hosts, tpu_v5e on v5-class TPUs,
+pallas_tpu on other TPUs. Flag sets are NOT duplicated here — the probed SRU's
+own ``lscpu_flags`` from the UPD are the single source of truth."""
 
 from __future__ import annotations
 
 import jax
 
-_BACKEND_TO_TARGET = {
-    "cpu": "cpu_xla",
-    "tpu": "tpu_v5e",
-    "gpu": "cpu_xla",  # conservative fallback: portable XLA path
-}
-
 
 def live_target() -> str:
-    return _BACKEND_TO_TARGET.get(jax.default_backend(), "cpu_xla")
+    backend = jax.default_backend()
+    if backend == "tpu":
+        kind = jax.devices()[0].device_kind.lower()
+        return "tpu_v5e" if "v5" in kind else "pallas_tpu"
+    # cpu, and conservatively gpu: the portable XLA dialect
+    return "cpu_xla"
 
 
 def live_flags() -> tuple[str, ...]:
-    backend = jax.default_backend()
-    flags = ["xla", backend]
-    if backend == "tpu":
-        flags += ["mxu", "vmem", "bf16_matmul"]
-        kind = jax.devices()[0].device_kind.lower()
-        if "v5" in kind:
-            flags.append("tpu_v5")
-        if "v4" in kind:
-            flags.append("tpu_v4")
-    if backend == "cpu":
-        flags += ["f64", "interpret_ok"]
-    return tuple(sorted(set(flags)))
+    """Feature flags of the probed SRU, read from its UPD target document."""
+    from . import loader
+
+    name = live_target()
+    for doc in loader.load_raw_targets():
+        if doc.get("name") == name:
+            return tuple(sorted(doc.get("lscpu_flags", ())))
+    return ("xla",)

@@ -87,6 +87,8 @@ class ImplDef:
 class TestDef:
     """A test case co-located with the primitive (paper §4.1)."""
 
+    __test__ = False                    # not a pytest class, despite the name
+
     name: str
     implementation: str
     requires: tuple[str, ...] = ()      # primitive dependencies -> test DAG edges

@@ -1,0 +1,11 @@
+"""Distribution layer: pure sharding rules + gradient compression.
+
+``sharding`` holds mesh-aware PartitionSpec rules (pure functions of shapes
+and names, so they are unit-testable without devices); ``compression`` holds
+int8 gradient compression: the train step round-trips gradients through the
+quantizer, and an ``ErrorFeedback`` helper is available for residual carry
+(not yet threaded through train_state — the biased scheme is the current
+default).
+"""
+
+from . import compression, sharding  # noqa: F401

@@ -1,0 +1,54 @@
+"""int8 absmax gradient compression with error feedback.
+
+``compress_decompress`` models the wire format: per-row (last-axis) absmax
+scaling to int8 and back. Quantization error per element is bounded by
+scale/2 = amax/254. ``ErrorFeedback`` carries the residual so the scheme is
+lossless in expectation: quantized + residual == input + residual_in.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_roundtrip(x):
+    """x -> dequantize(quantize_int8(x)), computed in f32."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(tree):
+    """Quantize-dequantize every leaf. Returns (tree', max_abs_error)."""
+    out = jax.tree.map(lambda g: _quantize_roundtrip(g).astype(g.dtype), tree)
+    errs = jax.tree.map(
+        lambda a, b: jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))),
+        out, tree)
+    leaves = jax.tree.leaves(errs)
+    err = jnp.max(jnp.stack(leaves)) if leaves else jnp.float32(0)
+    return out, err
+
+
+class ErrorFeedback:
+    """Residual bookkeeping: feed quantization error back into the next step."""
+
+    @staticmethod
+    def init(tree):
+        return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), tree)
+
+    @staticmethod
+    def apply(tree, residual):
+        """Returns (quantized, new_residual) with the identity
+        quantized + new_residual == tree + residual."""
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r, tree, residual)
+        quantized = jax.tree.map(
+            lambda c, g: _quantize_roundtrip(c).astype(g.dtype), corrected, tree)
+        # residual measured against the DTYPE-CAST value actually emitted, so
+        # the cast's own rounding also feeds back (exact identity on any dtype)
+        new_residual = jax.tree.map(
+            lambda c, q: c - q.astype(jnp.float32), corrected, quantized)
+        return quantized, new_residual

@@ -134,7 +134,7 @@ def flash_attention_4d(q, k, v, *, causal: bool = True, scale: float | None = No
             pltpu.VMEM((bq, _LANES), jnp.float32),   # running denominator
             pltpu.VMEM((bq, d), jnp.float32),        # output accumulator
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -58,7 +58,7 @@ def hadd_2d(x2, *, n_valid: int, block_rows: int = 256, block_cols: int = 1024,
         out_specs=pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, 1), x2.dtype),
         scratch_shapes=[pltpu.VMEM((bm, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

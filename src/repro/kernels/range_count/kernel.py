@@ -71,7 +71,7 @@ def range_count_2d(x2, low, high, *, n_valid: int, block_rows: int = 512,
         out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
         scratch_shapes=[pltpu.VMEM((1, lanes), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

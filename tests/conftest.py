@@ -3,6 +3,12 @@ import pytest
 # NOTE: no XLA_FLAGS here by design — smoke tests and benches must see the
 # single real CPU device; only launch/dryrun.py forces 512 host devices.
 
+# Property tests prefer real hypothesis; on containers without it, a seeded
+# deterministic stub keeps them runnable instead of erroring at collection.
+from repro._compat import hypothesis_stub as _hypothesis_stub
+
+_hypothesis_stub._register()
+
 
 @pytest.fixture(scope="session")
 def lib_cpu():

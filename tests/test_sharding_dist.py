@@ -74,6 +74,14 @@ def test_state_specs_batch1_keeps_seq_sharding():
     assert specs["k"] == P(None, None, None, "model", None)
 
 
+def test_state_specs_huge_batch_does_not_steal_model_axis():
+    """Decode batch larger than max_len: batch stays on data, seq on model."""
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    state = {"k": _sds((60, 4096, 8, 1024, 128))}
+    specs = sharding.state_specs(mesh, state)
+    assert specs["k"] == P(None, "data", None, "model", None)
+
+
 def test_batch_spec_divisibility():
     mesh = _FakeMesh((16, 16), ("data", "model"))
     assert sharding.batch_spec(mesh, 256) == P("data", None)

@@ -1,0 +1,75 @@
+"""Regression tests for the default UPD corpus (tsl_data/): the data layer the
+whole generator runs on must stay present, schema-valid, and covering every
+op the nn/train/data layers reach through repro.tsl_api.ops."""
+
+from repro.core import loader
+from repro.core.schema import PRIMITIVE_SCHEMA, TARGET_SCHEMA
+
+# every op name the framework layers call via `from repro.tsl_api import ops`
+FRAMEWORK_OPS = {
+    "matmul", "embed_lookup", "cache_update", "rmsnorm", "layernorm",
+    "softmax", "swiglu", "silu", "gelu", "sigmoid", "cross_entropy",
+    "rope_apply", "flash_attention", "attention_decode", "token_shift",
+    "causal_conv1d", "ssd_scan", "ssd_chunked", "ssd_decode", "wkv6_scan",
+    "wkv6_decode", "topk_gating", "moe_dispatch", "moe_combine", "expert_ffn",
+    # paper case-study surface (Fig 8) used by tests/benchmarks
+    "set", "set1", "load", "select", "between_inclusive", "hadd",
+    "to_integral", "range_count", "range_count_popcnt",
+}
+
+
+def _strip(doc):
+    return {k: v for k, v in doc.items() if not k.startswith("__")}
+
+
+def test_default_upd_targets_nonempty_and_valid():
+    docs = loader.load_raw_targets()
+    assert len(docs) >= 4
+    names = set()
+    for d in docs:
+        enriched, errs, _ = TARGET_SCHEMA.apply(_strip(d))
+        assert not errs, errs
+        names.add(enriched["name"])
+    assert {"cpu_xla", "pallas_interpret", "pallas_tpu", "tpu_v5e"} <= names
+    assert len(names) == len(docs), "duplicate target documents"
+
+
+def test_default_upd_primitives_nonempty_and_valid():
+    docs = loader.load_raw_primitives()
+    assert len(docs) >= 25
+    names = []
+    for d in docs:
+        enriched, errs, _ = PRIMITIVE_SCHEMA.apply(_strip(d))
+        assert not errs, (d.get("primitive_name"), errs)
+        assert enriched["definitions"], d.get("primitive_name")
+        names.append(enriched["primitive_name"])
+    assert len(set(names)) == len(names), "duplicate primitive documents"
+
+
+def test_default_upd_covers_framework_ops():
+    names = {d["primitive_name"] for d in loader.load_raw_primitives()}
+    missing = FRAMEWORK_OPS - names
+    assert not missing, f"UPD corpus missing framework ops: {sorted(missing)}"
+
+
+def test_every_primitive_has_cpu_definition_and_test():
+    """Every corpus primitive must be generatable for the portable target and
+    carry at least one co-located test (paper §4.1 warns otherwise)."""
+    for d in loader.load_raw_primitives():
+        enriched, errs, _ = PRIMITIVE_SCHEMA.apply(_strip(d))
+        assert not errs
+        targets = set()
+        for impl in enriched["definitions"]:
+            t = impl["target_extension"]
+            targets.update([t] if isinstance(t, str) else t)
+        assert "cpu_xla" in targets, enriched["primitive_name"]
+        assert enriched["testing"], enriched["primitive_name"]
+
+
+def test_fingerprint_tracks_upd_content(tmp_path, monkeypatch):
+    fp1 = loader.upd_fingerprint()
+    extra = tmp_path / "upd"
+    (extra / "targets").mkdir(parents=True)
+    (extra / "targets" / "x.yaml").write_text("---\nname: x\n...\n")
+    fp2 = loader.upd_fingerprint((str(extra),))
+    assert fp1 != fp2
