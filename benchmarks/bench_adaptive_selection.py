@@ -32,8 +32,8 @@ def run() -> list[str]:
                 emit(f"adaptive_{prim}_{ct}", 0,
                      f"by=bench flags={sel['required_flags']} vs_heuristic={delta}")
                 out.append(f"{prim}/{ct}: bench-selected ({delta})")
-    # timings live in the bench cache
-    cache_dir = Path(lib_bench.__file__).parents[2] / "bench_cache"
+    # timings live in the unified artifact cache (bench/ family)
+    cache_dir = Path(lib_bench.__file__).parents[2] / "bench"
     for f in sorted(cache_dir.glob("cpu_xla_*.json")):
         cache = json.loads(f.read_text())
         for key, rec in cache.items():

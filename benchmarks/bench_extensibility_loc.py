@@ -7,8 +7,6 @@ report UPD lines vs generated package lines per target.
 
 from __future__ import annotations
 
-from pathlib import Path
-
 from repro.core import GenConfig, generate_library
 from repro.core.loader import DEFAULT_UPD_ROOT
 

@@ -8,7 +8,7 @@ the exact published numbers; ``reduced()`` derives the CPU smoke-test variant
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

@@ -1,21 +1,35 @@
 """TSLGen-JAX — the paper's generator framework (DESIGN.md §1/§3).
 
 Public surface:
-    load_library(target=...)   -> generated + imported TSL module
-    generate_library(config)   -> on-disk package
-    GenConfig, Pipeline, core_pipeline — for custom pipelines (extension port)
+    load_library(target=...)    -> generated + imported TSL module
+    generate_library(config)    -> on-disk package (artifact-cache aware)
+    generate_all(targets)       -> many targets off ONE validated corpus
+    load_corpus(upd_paths)      -> immutable CorpusIR (validation memo)
+    ArtifactCache, CacheKey, GENERATOR_VERSION — content-addressed store
+    GenConfig, Pipeline, CorpusPipeline, core_pipeline — extension port
 """
 
-from .library import generate_library, load_library
-from .model import Context, GenConfig
+from .cache import GENERATOR_VERSION, ArtifactCache, CacheKey
+from .corpus import CorpusPipeline, corpus_cache_clear, load_corpus
+from .library import generate_all, generate_library, load_library
+from .model import CorpusBuild, CorpusIR, GenConfig, GenerationResult
 from .pipeline import GenerationError, Pipeline, core_pipeline
 
 __all__ = [
     "load_library",
     "generate_library",
+    "generate_all",
+    "load_corpus",
+    "corpus_cache_clear",
     "GenConfig",
-    "Context",
+    "CorpusBuild",
+    "CorpusIR",
+    "GenerationResult",
     "Pipeline",
+    "CorpusPipeline",
     "core_pipeline",
     "GenerationError",
+    "ArtifactCache",
+    "CacheKey",
+    "GENERATOR_VERSION",
 ]

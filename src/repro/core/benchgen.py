@@ -8,19 +8,20 @@ The paper leaves this as future work; we implement it.
 For every primitive with >1 valid candidate and a ``bench`` setup in its UPD,
 each candidate body is stage-1 rendered, exec'd into a scratch namespace,
 jit-compiled, and timed on the live host. Measured winners override the flag
-heuristic (``Selection.reason == "bench"``). Results are cached per UPD
-fingerprint so repeated generation is free ("ongoing process": a hardware
-change invalidates the cache via the probe flags in the key).
+heuristic (``Selection.reason == "bench"``). Winners live in the unified
+artifact cache, content-addressed by (UPD fingerprint, target, probed
+hardware flags, generator version) — moving the cache to different hardware
+or editing the corpus re-benchmarks automatically, editing nothing makes
+repeated generation free ("ongoing process").
 """
 
 from __future__ import annotations
 
-import json
 import time
-from pathlib import Path
 
 from . import engine
-from .model import Context, Selection
+from .cache import ArtifactCache
+from .model import GenerationResult, Selection
 from .select import hardware_flags, score, valid_candidates
 
 _PRELUDE = (
@@ -28,13 +29,13 @@ _PRELUDE = (
 )
 
 
-def _bench_cache_path(ctx: Context) -> Path:
-    root = Path(__file__).resolve().parents[3] / "build" / "bench_cache"
-    root.mkdir(parents=True, exist_ok=True)
-    return root / f"{ctx.config.target}_{ctx.meta.get('fingerprint','x')}.json"
+def _bench_store(ctx: GenerationResult) -> ArtifactCache:
+    from .library import DEFAULT_BUILD_ROOT
+
+    return ArtifactCache(ctx.config.build_root or DEFAULT_BUILD_ROOT)
 
 
-def _compile_candidate(ctx: Context, prim, impl, ctype: str):
+def _compile_candidate(ctx: GenerationResult, prim, impl, ctype: str):
     """exec a candidate implementation into a scratch module namespace."""
     sru = ctx.targets[impl.target_extension].as_render_dict()
     body = engine.render_stage1(impl.implementation, sru=sru, ctype=ctype,
@@ -74,18 +75,20 @@ def _time_candidate(fn, args: dict, n_iter: int) -> float:
 class BenchSelectGPO:
     name = "bench-select"
 
-    def run(self, ctx: Context) -> Context:
+    def run(self, ctx: GenerationResult) -> GenerationResult:
         if ctx.errors:
             return ctx
         tgt = ctx.targets[ctx.config.target]
         if not tgt.runs_on_host:
             ctx.warn("bench-select: target does not run on this host; skipped")
             return ctx
-        cache_path = _bench_cache_path(ctx)
-        cache: dict = {}
-        if cache_path.exists():
-            cache = json.loads(cache_path.read_text())
         hw = hardware_flags(ctx)
+        from .library import artifact_key
+
+        store = _bench_store(ctx)
+        store_key = artifact_key(ctx.config, ctx.meta.get("fingerprint", "x"),
+                                 ctx.corpus)
+        cache = store.bench_load(store_key)
 
         for name, sels in ctx.selection.items():
             prim = ctx.primitives[name]
@@ -132,6 +135,5 @@ class BenchSelectGPO:
                     )
                 else:
                     sels[ctype].reason = "bench"
-        cache_path.write_text(json.dumps(cache, indent=1))
-        ctx.meta["bench_cache"] = str(cache_path)
+        ctx.meta["bench_cache"] = str(store.bench_store(store_key, cache))
         return ctx

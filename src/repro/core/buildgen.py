@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import json
 
-from .model import Context, GeneratedFile
+from .model import GenerationResult, GeneratedFile
 
 _PYPROJECT = """[project]
 name = "{pkg}"
@@ -26,7 +26,7 @@ packages = ["{pkg}"]
 class BuildGenGPO:
     name = "buildgen"
 
-    def run(self, ctx: Context) -> Context:
+    def run(self, ctx: GenerationResult) -> GenerationResult:
         if ctx.errors:
             return ctx
         manifest = {

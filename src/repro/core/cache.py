@@ -1,0 +1,193 @@
+"""Content-addressed artifact store for generated libraries AND
+bench-selection winners (paper §4.2: benchmarking alongside adaptive variant
+selection "should be integrated as an ongoing process").
+
+Everything the generator emits is addressed by one :class:`CacheKey`:
+
+    (UPD fingerprint, target, probed hardware flags, generator version,
+     variant digest of the generation knobs)
+
+so all artifact families share ONE invalidation rule — editing any UPD
+document/template/generator source changes the fingerprint, plugging the
+library into a different machine changes the probed hardware flags, and a
+:data:`GENERATOR_VERSION` bump retires every artifact of the previous engine.
+Bench winners deliberately omit the variant digest: a measured winner is a
+property of (corpus, target, hardware), not of which package flavour asked
+for it.
+
+Layout under the cache root (default ``build/tsl/``)::
+
+    pkg/<package>_<target>_<digest>/   generated library packages
+    bench/<target>_<digest>.json       bench-selection winners
+    index.json                         digest -> key components (introspection)
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import shutil
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Iterable
+
+# Bump to retire every previously generated artifact (schema change in the
+# generated package layout, selection semantics change, ...).
+GENERATOR_VERSION = "2.0.0"
+
+
+@dataclass(frozen=True)
+class CacheKey:
+    """The content address of one generation run."""
+
+    fingerprint: str                     # UPD + template + generator-source hash
+    target: str                          # SRU name
+    hardware_flags: tuple[str, ...]      # probed/overridden flags, sorted
+    generator_version: str               # GENERATOR_VERSION at generation time
+    variant: str = ""                    # digest of generation knobs ("" = bench)
+
+    def digest(self) -> str:
+        h = hashlib.sha256()
+        for part in (self.fingerprint, self.target, ",".join(self.hardware_flags),
+                     self.generator_version, self.variant):
+            h.update(part.encode())
+            h.update(b"\0")
+        return h.hexdigest()[:16]
+
+    def as_dict(self) -> dict:
+        return {
+            "fingerprint": self.fingerprint,
+            "target": self.target,
+            "hardware_flags": list(self.hardware_flags),
+            "generator_version": self.generator_version,
+            "variant": self.variant,
+            "digest": self.digest(),
+        }
+
+    def without_variant(self) -> "CacheKey":
+        """The bench-winner address shared by all package variants."""
+        return CacheKey(self.fingerprint, self.target, self.hardware_flags,
+                        self.generator_version, "")
+
+
+def variant_digest(config) -> str:
+    """Digest of the generation knobs that change the package *content*
+    beyond (corpus, target, hardware)."""
+    h = hashlib.sha256(repr((
+        sorted(config.only) if config.only else None,
+        config.emit_tests, config.emit_docs, config.emit_build,
+        config.use_bench_selection, config.package_name,
+    )).encode())
+    return h.hexdigest()[:8]
+
+
+class ArtifactCache:
+    """Filesystem-backed store; one instance per cache root."""
+
+    def __init__(self, root: Path | str):
+        self.root = Path(root)
+
+    # -- layout --------------------------------------------------------------
+
+    @property
+    def package_root(self) -> Path:
+        """Importable package directory (this path goes on ``sys.path``)."""
+        return self.root / "pkg"
+
+    @property
+    def bench_root(self) -> Path:
+        return self.root / "bench"
+
+    def package_name(self, base: str, key: CacheKey) -> str:
+        return f"{base}_{key.target}_{key.digest()[:10]}"
+
+    def package_dir(self, name: str) -> Path:
+        return self.package_root / name
+
+    # -- generated packages ---------------------------------------------------
+
+    def lookup(self, name: str) -> Path | None:
+        """Committed package dir for ``name``, or None (partial writes — no
+        ``_manifest.json`` stamp yet — count as misses)."""
+        d = self.package_dir(name)
+        return d if (d / "_manifest.json").exists() else None
+
+    def commit(self, name: str, key: CacheKey, files: Iterable) -> Path:
+        """Write a generated file set as package ``name`` and stamp it."""
+        pkg_dir = self.package_dir(name)
+        pkg_dir.mkdir(parents=True, exist_ok=True)
+        for f in files:
+            out = pkg_dir / f.relpath
+            out.parent.mkdir(parents=True, exist_ok=True)
+            out.write_text(f.content)
+        (pkg_dir / "_cache_key.json").write_text(
+            json.dumps(key.as_dict(), indent=1))
+        if not (pkg_dir / "_manifest.json").exists():
+            # emit_build=False still needs the commit stamp
+            (pkg_dir / "_manifest.json").write_text("{}")
+        self._index_put(name, key)
+        return pkg_dir
+
+    # -- bench winners ---------------------------------------------------------
+
+    def bench_path(self, key: CacheKey) -> Path:
+        k = key.without_variant()
+        return self.bench_root / f"{k.target}_{k.digest()}.json"
+
+    def bench_load(self, key: CacheKey) -> dict:
+        p = self.bench_path(key)
+        if not p.exists():
+            return {}
+        try:
+            return json.loads(p.read_text())
+        except json.JSONDecodeError:
+            return {}
+
+    def bench_store(self, key: CacheKey, data: dict) -> Path:
+        p = self.bench_path(key)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(data, indent=1))
+        return p
+
+    # -- index / maintenance ----------------------------------------------------
+
+    @property
+    def _index_path(self) -> Path:
+        return self.root / "index.json"
+
+    def _index(self) -> dict:
+        if not self._index_path.exists():
+            return {}
+        try:
+            return json.loads(self._index_path.read_text())
+        except json.JSONDecodeError:
+            return {}
+
+    def _index_put(self, name: str, key: CacheKey) -> None:
+        idx = self._index()
+        idx[name] = key.as_dict()
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._index_path.write_text(json.dumps(idx, indent=1))
+
+    def stats(self) -> dict:
+        pkgs = sorted(p.name for p in self.package_root.iterdir()
+                      if p.is_dir()) if self.package_root.is_dir() else []
+        benches = sorted(p.name for p in self.bench_root.glob("*.json")) \
+            if self.bench_root.is_dir() else []
+        return {
+            "root": str(self.root),
+            "packages": pkgs,
+            "bench_entries": benches,
+            "index": self._index(),
+        }
+
+    def clear(self) -> int:
+        """Drop every cached artifact. Returns number of entries removed."""
+        n = 0
+        for sub in (self.package_root, self.bench_root):
+            if sub.is_dir():
+                n += sum(1 for _ in sub.iterdir())
+                shutil.rmtree(sub)
+        if self._index_path.exists():
+            self._index_path.unlink()
+        return n

@@ -1,0 +1,126 @@
+"""CLI for the incremental multi-target generation engine.
+
+    python -m repro.core generate --targets cpu_xla,pallas_interpret
+    python -m repro.core generate --all --force
+    python -m repro.core corpus
+    python -m repro.core cache stats
+    python -m repro.core cache clear
+
+The paper drives its generator from a ``main.py`` invoked by cmake; this is
+the JAX-analogue entry point, plus artifact-cache maintenance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _add_common(ap: argparse.ArgumentParser) -> None:
+    ap.add_argument("--upd-path", action="append", default=[],
+                    help="extra UPD search path (repeatable)")
+    ap.add_argument("--build-root", default=None,
+                    help="artifact cache root (default: build/tsl)")
+
+
+def _cmd_generate(args) -> int:
+    from .corpus import load_corpus
+    from .library import generate_all
+
+    upd_paths = tuple(args.upd_path)
+    corpus = load_corpus(upd_paths)
+    if args.all:
+        targets = None
+    elif args.targets:
+        targets = [t for chunk in args.targets for t in chunk.split(",") if t]
+    else:
+        print("error: pass --targets a,b,... or --all", file=sys.stderr)
+        return 2
+    out = generate_all(
+        targets,
+        Path(args.build_root) if args.build_root else None,
+        force=args.force,
+        corpus=corpus,
+        upd_paths=upd_paths,
+        only=tuple(args.only) if args.only else None,
+        emit_docs=args.docs,
+        use_bench_selection=args.bench,
+    )
+    for name, pkg_dir in out.items():
+        print(f"{name}: {pkg_dir}")
+    return 0
+
+
+def _cmd_corpus(args) -> int:
+    from .corpus import load_corpus
+
+    corpus = load_corpus(tuple(args.upd_path))
+    info = {
+        "fingerprint": corpus.fingerprint,
+        "targets": sorted(corpus.targets),
+        "primitives": len(corpus.primitives),
+        "warnings": len(corpus.warnings),
+    }
+    print(json.dumps(info, indent=1))
+    if args.warnings:
+        for w in corpus.warnings:
+            print(f"  warning: {w}")
+    return 0
+
+
+def _cmd_cache(args) -> int:
+    from .cache import ArtifactCache
+    from .library import DEFAULT_BUILD_ROOT
+
+    store = ArtifactCache(Path(args.build_root) if args.build_root
+                          else DEFAULT_BUILD_ROOT)
+    if args.action == "stats":
+        print(json.dumps(store.stats(), indent=1))
+    else:  # clear
+        print(f"removed {store.clear()} cached artifact(s)")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(prog="python -m repro.core",
+                                 description=__doc__,
+                                 formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="command", required=True)
+
+    g = sub.add_parser("generate", help="generate libraries for target(s)")
+    _add_common(g)
+    g.add_argument("--targets", action="append", default=[],
+                   help="comma-separated target names (repeatable)")
+    g.add_argument("--all", action="store_true",
+                   help="every target the corpus defines")
+    g.add_argument("--only", action="append", default=[],
+                   help="cherry-picked primitive (repeatable; paper 'slim')")
+    g.add_argument("--force", action="store_true",
+                   help="regenerate even on a cache hit")
+    g.add_argument("--bench", action="store_true",
+                   help="benchmark-driven adaptive selection (paper §4.2)")
+    g.add_argument("--docs", action="store_true", help="emit docs/ markdown")
+    g.set_defaults(fn=_cmd_generate)
+
+    c = sub.add_parser("corpus", help="validate + summarize the UPD corpus")
+    _add_common(c)
+    c.add_argument("--warnings", action="store_true",
+                   help="print every corpus warning")
+    c.set_defaults(fn=_cmd_corpus)
+
+    k = sub.add_parser("cache", help="artifact-cache maintenance")
+    _add_common(k)
+    k.add_argument("action", choices=("stats", "clear"))
+    k.set_defaults(fn=_cmd_cache)
+    return ap
+
+
+def main(argv: list[str] | None = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

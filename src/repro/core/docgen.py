@@ -5,13 +5,13 @@ from __future__ import annotations
 
 import collections
 
-from .model import Context, GeneratedFile
+from .model import GenerationResult, GeneratedFile
 
 
 class DocGenGPO:
     name = "docgen"
 
-    def run(self, ctx: Context) -> Context:
+    def run(self, ctx: GenerationResult) -> GenerationResult:
         if ctx.errors:
             return ctx
         groups = collections.defaultdict(list)

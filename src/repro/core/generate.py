@@ -17,7 +17,7 @@ from dataclasses import dataclass, field
 from typing import Any
 
 from . import engine
-from .model import Context, GeneratedFile, PrimitiveDef, Selection
+from .model import GenerationResult, GeneratedFile, PrimitiveDef, Selection
 
 
 @dataclass
@@ -28,7 +28,7 @@ class _SpecView:
     ctypes: list[str] = field(default_factory=list)
 
 
-def _stage1(ctx: Context, prim: PrimitiveDef, sel: Selection) -> str:
+def _stage1(ctx: GenerationResult, prim: PrimitiveDef, sel: Selection) -> str:
     sru = ctx.targets[sel.target].as_render_dict()
     body = engine.render_stage1(
         sel.impl.implementation,
@@ -40,7 +40,7 @@ def _stage1(ctx: Context, prim: PrimitiveDef, sel: Selection) -> str:
     return body if body.strip() else "pass"
 
 
-def _render_helpers(ctx: Context, prim: PrimitiveDef, sel: Selection) -> str:
+def _render_helpers(ctx: GenerationResult, prim: PrimitiveDef, sel: Selection) -> str:
     if not sel.impl.helpers.strip():
         return ""
     sru = ctx.targets[sel.target].as_render_dict()
@@ -63,7 +63,7 @@ def _fwd_args(prim: PrimitiveDef) -> str:
 class GenerateGPO:
     name = "generate"
 
-    def run(self, ctx: Context) -> Context:
+    def run(self, ctx: GenerationResult) -> GenerationResult:
         if ctx.errors:
             return ctx
         target = ctx.targets[ctx.config.target]
@@ -136,7 +136,7 @@ class GenerateGPO:
 
     # ------------------------------------------------------------------
 
-    def _primitive_view(self, ctx: Context, prim: PrimitiveDef,
+    def _primitive_view(self, ctx: GenerationResult, prim: PrimitiveDef,
                         sels: dict[str, Selection]) -> dict[str, Any]:
         # stage-1 render every ctype, coalesce identical bodies
         by_body: dict[str, _SpecView] = {}

@@ -1,22 +1,34 @@
 """Public generator API: generate → materialize on disk → import.
 
 The C++ TSL is generated into a header tree and compiled into the consumer;
-the JAX analogue generates a Python package into ``build/tsl/`` and imports
-it. The package directory name embeds target + UPD fingerprint + cherry-pick
-hash, so regeneration is a cache hit when nothing changed (paper Fig 7a:
-cmake re-runs the generator; dependency tracking makes it cheap).
+the JAX analogue generates a Python package into the artifact cache under
+``build/tsl/`` and imports it.
+
+Incremental multi-target engine (paper Fig 7a + §4.2 "ongoing process"):
+
+* the corpus (loaded + validated UPD) is built once per fingerprint and
+  shared across targets — ``generate_all`` re-validates NOTHING when
+  generating a second target;
+* every generated package is content-addressed by
+  (UPD fingerprint, target, probed hardware flags, generator version,
+  config variant), so ``load_library()`` with unchanged inputs is a pure
+  cache hit that never re-runs a single GPO;
+* editing any UPD document, changing the hardware flags, or bumping
+  :data:`~.cache.GENERATOR_VERSION` each force regeneration.
 """
 
 from __future__ import annotations
 
-import hashlib
+import dataclasses
 import importlib
 import sys
 from pathlib import Path
 from types import ModuleType
 
 from . import hwprobe, loader
-from .model import Context, GenConfig
+from .cache import ArtifactCache, CacheKey, variant_digest
+from .corpus import load_corpus
+from .model import CorpusIR, GenConfig, GenerationResult
 from .pipeline import core_pipeline
 
 DEFAULT_BUILD_ROOT = Path(__file__).resolve().parents[3] / "build" / "tsl"
@@ -24,39 +36,79 @@ DEFAULT_BUILD_ROOT = Path(__file__).resolve().parents[3] / "build" / "tsl"
 _IN_PROCESS_CACHE: dict[str, ModuleType] = {}
 
 
-def _pkg_name(config: GenConfig, fingerprint: str) -> str:
-    h = hashlib.sha256()
-    h.update(fingerprint.encode())
-    h.update(repr(sorted(config.only) if config.only else None).encode())
-    h.update(repr(config.hardware_flags).encode())
-    h.update(repr((config.emit_tests, config.emit_docs, config.emit_build,
-                   config.use_bench_selection)).encode())
-    return f"{config.package_name}_{config.target}_{h.hexdigest()[:10]}"
+def effective_hardware_flags(config: GenConfig,
+                             corpus: CorpusIR | None = None) -> tuple[str, ...]:
+    """Resolve the hardware flags that key this generation run: the explicit
+    override if given, else the target SRU's own flags. On warm cache paths
+    (no corpus built) the flags come from the raw UPD document — a cache hit
+    must not pay for validation."""
+    if config.hardware_flags is not None:
+        return tuple(sorted(config.hardware_flags))
+    if corpus is not None and config.target in corpus.targets:
+        return tuple(sorted(corpus.targets[config.target].flags))
+    for doc in loader.load_raw_targets(config.upd_paths):
+        if doc.get("name") == config.target:
+            return tuple(sorted(doc.get("lscpu_flags", ())))
+    return ()
+
+
+def artifact_key(config: GenConfig, fingerprint: str,
+                 corpus: CorpusIR | None = None) -> CacheKey:
+    from . import cache as _cache  # read GENERATOR_VERSION at call time
+
+    return CacheKey(
+        fingerprint=fingerprint,
+        target=config.target,
+        hardware_flags=effective_hardware_flags(config, corpus),
+        generator_version=_cache.GENERATOR_VERSION,
+        variant=variant_digest(config),
+    )
 
 
 def generate_library(config: GenConfig, build_root: Path | None = None,
-                     *, force: bool = False) -> tuple[Path, Context | None]:
-    """Run the pipeline and write the generated package. Returns (pkg_dir, ctx);
-    ctx is None on a disk-cache hit."""
-    build_root = Path(build_root or DEFAULT_BUILD_ROOT)
-    fingerprint = loader.upd_fingerprint(config.upd_paths)
-    pkg = _pkg_name(config, fingerprint)
-    pkg_dir = build_root / pkg
-    stamp = pkg_dir / "_manifest.json"
-    if stamp.exists() and not force:
-        return pkg_dir, None
+                     *, force: bool = False,
+                     corpus: CorpusIR | None = None
+                     ) -> tuple[Path, GenerationResult | None]:
+    """Run the target pipeline (or hit the artifact cache) for one target.
 
-    config = GenConfig(**{**config.__dict__, "package_name": pkg})
-    ctx = core_pipeline(config).run(config)
-    pkg_dir.mkdir(parents=True, exist_ok=True)
-    for f in ctx.files:
-        out = pkg_dir / f.relpath
-        out.parent.mkdir(parents=True, exist_ok=True)
-        out.write_text(f.content)
-    if not (pkg_dir / "_manifest.json").exists():
-        # emit_build=False still needs the cache stamp
-        (pkg_dir / "_manifest.json").write_text("{}")
-    return pkg_dir, ctx
+    Returns (pkg_dir, result); result is None on a cache hit — no GPO ran."""
+    build_root = Path(build_root or config.build_root or DEFAULT_BUILD_ROOT)
+    store = ArtifactCache(build_root)
+    fingerprint = (corpus.fingerprint if corpus is not None
+                   else loader.upd_fingerprint(config.upd_paths))
+    key = artifact_key(config, fingerprint, corpus)
+    pkg = store.package_name(config.package_name, key)
+    hit = store.lookup(pkg)
+    if hit is not None and not force:
+        return hit, None
+
+    if corpus is None:
+        corpus = load_corpus(config.upd_paths, fingerprint=fingerprint)
+    run_cfg = dataclasses.replace(config, package_name=pkg,
+                                  build_root=str(build_root))
+    result = core_pipeline(run_cfg).run(run_cfg, corpus=corpus)
+    return store.commit(pkg, key, result.files), result
+
+
+def generate_all(targets: tuple[str, ...] | list[str] | None = None,
+                 build_root: Path | None = None, *, force: bool = False,
+                 corpus: CorpusIR | None = None,
+                 upd_paths: tuple[str, ...] = (),
+                 **config_kwargs) -> dict[str, Path]:
+    """Generate libraries for several targets off ONE shared corpus.
+
+    ``targets=None`` means every target the corpus defines. Validation and
+    template checking run at most once regardless of target count."""
+    if corpus is None:
+        corpus = load_corpus(tuple(upd_paths))
+    names = list(targets) if targets is not None else sorted(corpus.targets)
+    out: dict[str, Path] = {}
+    for name in names:
+        cfg = GenConfig(target=name, upd_paths=tuple(upd_paths),
+                        **config_kwargs)
+        out[name], _ = generate_library(cfg, build_root, force=force,
+                                        corpus=corpus)
+    return out
 
 
 def load_library(target: str = "auto", *, only: tuple[str, ...] | None = None,
@@ -69,7 +121,8 @@ def load_library(target: str = "auto", *, only: tuple[str, ...] | None = None,
     """Generate (cached) and import the TSL for ``target``.
 
     ``target='auto'`` probes the live backend (paper: cpuinfo flags feeding
-    the generator from cmake)."""
+    the generator from cmake). Warm path — unchanged fingerprint + hardware
+    flags — is an artifact-cache hit: no validation, no generation."""
     if target == "auto":
         target = hwprobe.live_target()
     config = GenConfig(
@@ -86,8 +139,9 @@ def load_library(target: str = "auto", *, only: tuple[str, ...] | None = None,
     pkg = pkg_dir.name
     if pkg in _IN_PROCESS_CACHE and not force:
         return _IN_PROCESS_CACHE[pkg]
-    if str(build_root) not in sys.path:
-        sys.path.insert(0, str(build_root))
+    pkg_root = str(pkg_dir.parent)
+    if pkg_root not in sys.path:
+        sys.path.insert(0, pkg_root)
     if force and pkg in sys.modules:
         for m in [m for m in sys.modules if m == pkg or m.startswith(pkg + ".")]:
             del sys.modules[m]

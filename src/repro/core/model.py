@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Any
+from types import MappingProxyType
+from typing import Any, Mapping
 
 
 @dataclass(frozen=True)
@@ -155,20 +156,92 @@ class GeneratedFile:
 
 
 @dataclass
-class Context:
-    """The object flowing through the GPO pipeline (paper Fig 5)."""
+class CorpusBuild:
+    """Mutable state flowing through the *corpus* pipeline (load → validate).
 
-    config: "GenConfig"
+    Target-agnostic: loading, template checking, schema validation and
+    enrichment happen once per UPD fingerprint, not once per generation
+    target.  ``freeze()`` produces the immutable :class:`CorpusIR` every
+    per-target pipeline run shares.
+    """
+
+    upd_paths: tuple[str, ...] = ()
+    fingerprint: str = ""
     raw_targets: list[dict] = field(default_factory=list)
     raw_primitives: list[dict] = field(default_factory=list)
     targets: dict[str, TargetDef] = field(default_factory=dict)
     primitives: dict[str, PrimitiveDef] = field(default_factory=dict)
+    warnings: list[str] = field(default_factory=list)
+    errors: list[str] = field(default_factory=list)
+
+    def warn(self, msg: str) -> None:
+        self.warnings.append(msg)
+
+    def fail(self, msg: str) -> None:
+        self.errors.append(msg)
+
+    def freeze(self) -> "CorpusIR":
+        return CorpusIR(
+            fingerprint=self.fingerprint,
+            upd_paths=self.upd_paths,
+            targets=MappingProxyType(dict(self.targets)),
+            primitives=MappingProxyType(dict(self.primitives)),
+            warnings=tuple(self.warnings),
+        )
+
+
+@dataclass(frozen=True)
+class CorpusIR:
+    """Immutable, target-agnostic view of the validated UPD corpus.
+
+    Built once per UPD fingerprint and shared by every per-target generation
+    run — the corpus half of the corpus/target split (paper §4.2 "ongoing
+    process": regeneration for another target must not re-validate)."""
+
+    fingerprint: str
+    upd_paths: tuple[str, ...]
+    targets: Mapping[str, TargetDef]
+    primitives: Mapping[str, PrimitiveDef]
+    warnings: tuple[str, ...] = ()
+
+    @classmethod
+    def from_defs(cls, targets: dict[str, TargetDef] | None = None,
+                  primitives: dict[str, PrimitiveDef] | None = None,
+                  fingerprint: str = "adhoc",
+                  upd_paths: tuple[str, ...] = ()) -> "CorpusIR":
+        """Build a corpus directly from typed defs (tests, custom pipelines)."""
+        return cls(
+            fingerprint=fingerprint,
+            upd_paths=upd_paths,
+            targets=MappingProxyType(dict(targets or {})),
+            primitives=MappingProxyType(dict(primitives or {})),
+        )
+
+
+@dataclass
+class GenerationResult:
+    """Per-target mutable state flowing through the *target* pipeline
+    (select → [bench-select] → generate → testgen/buildgen/docgen).
+
+    The corpus half (``corpus``) is immutable and shared; everything mutable
+    here is specific to one (target, config) generation run."""
+
+    config: "GenConfig"
+    corpus: CorpusIR
     # selection[primitive][ctype] -> Selection  (for config.target only)
     selection: dict[str, dict[str, Selection]] = field(default_factory=dict)
     files: list[GeneratedFile] = field(default_factory=list)
     warnings: list[str] = field(default_factory=list)
     errors: list[str] = field(default_factory=list)
     meta: dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def targets(self) -> Mapping[str, TargetDef]:
+        return self.corpus.targets
+
+    @property
+    def primitives(self) -> Mapping[str, PrimitiveDef]:
+        return self.corpus.primitives
 
     def warn(self, msg: str) -> None:
         self.warnings.append(msg)
@@ -190,3 +263,4 @@ class GenConfig:
     emit_build: bool = True
     use_bench_selection: bool = False    # beyond-paper §4.2 adaptive selection
     upd_paths: tuple[str, ...] = ()      # extra UPD search paths (extensibility studies)
+    build_root: str | None = None        # artifact-cache root (None -> build/tsl)

@@ -1,24 +1,33 @@
-"""GPO pipeline (paper Fig 5 ①).
+"""GPO pipelines (paper Fig 5 ①).
 
 *"We designed our generator core as a pipeline consisting of multiple
 generator pipeline operators (GPO), where every GPO depends on the result of
 the previous one. That way, the GPOs remain exchangeable, and the pipeline can
 be altered in its behavior by changing an operator or expanded by adding
 further operators."*
+
+Since the incremental-engine refactor the GPOs are split into two phases:
+
+* **corpus phase** (``corpus.CorpusPipeline``): template-check + validate,
+  target-agnostic, run ONCE per UPD fingerprint, producing an immutable
+  :class:`~.model.CorpusIR`.
+* **target phase** (:class:`Pipeline` here): select → [bench-select] →
+  generate → testgen/buildgen/docgen, run once per (target, config) on a
+  shared corpus, producing a :class:`~.model.GenerationResult`.
 """
 
 from __future__ import annotations
 
 from typing import Protocol
 
-from . import engine, loader
-from .model import Context, GenConfig
+from . import engine
+from .model import GenConfig, GenerationResult
 
 
 class GPO(Protocol):
     name: str
 
-    def run(self, ctx: Context) -> Context: ...
+    def run(self, ctx): ...
 
 
 class GenerationError(RuntimeError):
@@ -32,11 +41,13 @@ class GenerationError(RuntimeError):
 
 class TemplateCheckGPO:
     """Paper ①: 'every code template is loaded once into the framework and
-    subsequently validated' — Jinja2 syntax errors surface here, not mid-render."""
+    subsequently validated' — Jinja2 syntax errors surface here, not mid-render.
+    Corpus-phase GPO: templates are target-agnostic, so one check covers every
+    generation target."""
 
     name = "template-check"
 
-    def run(self, ctx: Context) -> Context:
+    def run(self, ctx):
         env = engine.environment()
         for name in env.list_templates(filter_func=lambda n: n.endswith(".j2")):
             try:
@@ -46,37 +57,48 @@ class TemplateCheckGPO:
         return ctx
 
 
-class Pipeline:
+class OperatorList:
+    """Exchangeability / extension port shared by both pipeline phases
+    (paper Fig 5 ⑦)."""
+
     def __init__(self, operators: list[GPO]):
         self.operators = list(operators)
 
     def names(self) -> list[str]:
         return [op.name for op in self.operators]
 
-    # exchangeability / extension port (paper Fig 5 ⑦)
-    def append(self, op: GPO) -> "Pipeline":
+    def append(self, op: GPO):
         self.operators.append(op)
         return self
 
-    def insert_after(self, name: str, op: GPO) -> "Pipeline":
+    def insert_after(self, name: str, op: GPO):
         for i, existing in enumerate(self.operators):
             if existing.name == name:
                 self.operators.insert(i + 1, op)
                 return self
         raise KeyError(f"no GPO named {name!r}")
 
-    def replace(self, name: str, op: GPO) -> "Pipeline":
+    def replace(self, name: str, op: GPO):
         for i, existing in enumerate(self.operators):
             if existing.name == name:
                 self.operators[i] = op
                 return self
         raise KeyError(f"no GPO named {name!r}")
 
-    def run(self, config: GenConfig, *, strict: bool = True) -> Context:
-        ctx = Context(config=config)
-        ctx.raw_targets = loader.load_raw_targets(config.upd_paths)
-        ctx.raw_primitives = loader.load_raw_primitives(config.upd_paths)
-        ctx.meta["fingerprint"] = loader.upd_fingerprint(config.upd_paths)
+
+class Pipeline(OperatorList):
+    """The target-phase pipeline: runs per (target, config) on a shared,
+    already-validated corpus."""
+
+    def run(self, config: GenConfig, *, corpus=None,
+            strict: bool = True) -> GenerationResult:
+        if corpus is None:
+            from .corpus import load_corpus
+
+            corpus = load_corpus(config.upd_paths)
+        ctx = GenerationResult(config=config, corpus=corpus,
+                               warnings=list(corpus.warnings))
+        ctx.meta["fingerprint"] = corpus.fingerprint
         for op in self.operators:
             ctx = op.run(ctx)
             if ctx.errors and strict:
@@ -85,16 +107,15 @@ class Pipeline:
 
 
 def core_pipeline(config: GenConfig) -> Pipeline:
-    """The fundamental four-GPO core (paper ①) + configured extension GPOs."""
+    """The target-phase core (paper ①) + configured extension GPOs."""
     from .benchgen import BenchSelectGPO
     from .buildgen import BuildGenGPO
     from .docgen import DocGenGPO
     from .generate import GenerateGPO
     from .select import SelectGPO
     from .testgen import TestGenGPO
-    from .validate import ValidateGPO
 
-    pipe = Pipeline([TemplateCheckGPO(), ValidateGPO(), SelectGPO(), GenerateGPO()])
+    pipe = Pipeline([SelectGPO(), GenerateGPO()])
     # extension port ⑦
     if config.use_bench_selection:
         pipe.insert_after("select", BenchSelectGPO())

@@ -15,7 +15,7 @@ surface all problems at once (paper: "errors are prompted to the user").
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable
 
 # ---------------------------------------------------------------------------

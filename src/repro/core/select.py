@@ -17,10 +17,10 @@ slim one on a per-use-case basis".
 
 from __future__ import annotations
 
-from .model import Context, ImplDef, PrimitiveDef, Selection
+from .model import GenerationResult, ImplDef, PrimitiveDef, Selection
 
 
-def hardware_flags(ctx: Context) -> frozenset[str]:
+def hardware_flags(ctx: GenerationResult) -> frozenset[str]:
     """Available feature flags: target SRU flags, optionally overridden by the
     user-supplied hardware description (paper: flags may be user input or
     probed from the OS)."""
@@ -70,7 +70,7 @@ def choose(prim: PrimitiveDef, target: str, ctype: str, hw: frozenset[str]
     )
 
 
-def cherry_pick(ctx: Context) -> set[str]:
+def cherry_pick(ctx: GenerationResult) -> set[str]:
     """Resolve the ``only`` subset, closing over test dependencies so that the
     generated slim library still carries everything its tests need."""
     if ctx.config.only is None:
@@ -94,7 +94,7 @@ def cherry_pick(ctx: Context) -> set[str]:
 class SelectGPO:
     name = "select"
 
-    def run(self, ctx: Context) -> Context:
+    def run(self, ctx: GenerationResult) -> GenerationResult:
         target = ctx.config.target
         if target not in ctx.targets:
             ctx.fail(f"select: unknown target {target!r}")

@@ -6,18 +6,22 @@ within the input and enriching the provided user data."*
 
 Converts raw YAML docs → typed ``TargetDef``/``PrimitiveDef`` after schema
 application; collects all errors before failing.
+
+Corpus-phase GPO: validation is target-agnostic, so it runs ONCE per UPD
+fingerprint (on a :class:`~.model.CorpusBuild`) no matter how many targets
+are subsequently generated from the shared corpus.
 """
 
 from __future__ import annotations
 
 from . import schema as S
-from .model import Context, ImplDef, ParamDef, PrimitiveDef, TargetDef, TestDef
+from .model import CorpusBuild, ImplDef, ParamDef, PrimitiveDef, TargetDef, TestDef
 
 
 class ValidateGPO:
     name = "validate"
 
-    def run(self, ctx: Context) -> Context:
+    def run(self, ctx: CorpusBuild) -> CorpusBuild:
         self._targets(ctx)
         self._primitives(ctx)
         self._cross_check(ctx)
@@ -25,7 +29,7 @@ class ValidateGPO:
 
     # -- targets ------------------------------------------------------------
 
-    def _targets(self, ctx: Context) -> None:
+    def _targets(self, ctx: CorpusBuild) -> None:
         for raw in ctx.raw_targets:
             raw = {k: v for k, v in raw.items() if not k.startswith("__")}
             doc, errs, warns = S.TARGET_SCHEMA.apply(raw)
@@ -62,7 +66,7 @@ class ValidateGPO:
 
     # -- primitives ----------------------------------------------------------
 
-    def _primitives(self, ctx: Context) -> None:
+    def _primitives(self, ctx: CorpusBuild) -> None:
         for raw in ctx.raw_primitives:
             raw = {k: v for k, v in raw.items() if not k.startswith("__")}
             doc, errs, warns = S.PRIMITIVE_SCHEMA.apply(raw)
@@ -131,7 +135,7 @@ class ValidateGPO:
 
     # -- cross checks ---------------------------------------------------------
 
-    def _cross_check(self, ctx: Context) -> None:
+    def _cross_check(self, ctx: CorpusBuild) -> None:
         for prim in ctx.primitives.values():
             for d in prim.definitions:
                 if d.target_extension not in ctx.targets:
@@ -150,5 +154,6 @@ class ValidateGPO:
             if not prim.tests:
                 # paper §4.1: "If no test cases are defined, a warning will be emitted."
                 ctx.warn(f"primitive {prim.name!r}: no test cases defined")
-        if ctx.config.target not in ctx.targets and ctx.config.target != "auto":
-            ctx.fail(f"requested generation target {ctx.config.target!r} is not defined")
+        # NOTE: existence of the *requested* generation target is a target-phase
+        # concern now (SelectGPO fails on unknown targets); the corpus itself
+        # is target-agnostic.

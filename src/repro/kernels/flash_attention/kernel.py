@@ -31,7 +31,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from ..common import cdiv
 
 NEG_INF = -1e30
 _LANES = 128

@@ -5,7 +5,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from ..common import pad_to, round_up, sublane_multiple
 from . import kernel, ref

@@ -22,7 +22,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from ..common import cdiv
 
 
 def _range_count_kernel(x_ref, lo_ref, hi_ref, o_ref, acc_scr, *, n_valid: int,

@@ -12,7 +12,6 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from ..common import cdiv
 
 
 def _softmax_kernel(x_ref, o_ref):

@@ -7,7 +7,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from ..common import pad_to, round_up, sublane_multiple
+from ..common import pad_to, round_up
 from . import kernel, ref
 
 

@@ -67,6 +67,7 @@ def main(argv=None) -> dict:
     outputs = []
     while pending:
         wave, pending = pending[:args.batch], pending[args.batch:]
+        n_real = len(wave)                            # requests actually served
         while len(wave) < args.batch:                 # pad the wave
             wave.append(np.zeros(args.prompt_len, np.int32))
         logits, state = prefill(params, make_batch(wave), max_len)
@@ -77,9 +78,12 @@ def main(argv=None) -> dict:
             logits, state = decode(params, state, tok.astype(jnp.int32), pos)
             tok = jnp.argmax(logits, axis=-1)[:, None]
             gen.append(tok)
-        outputs.append(np.concatenate([np.asarray(g) for g in gen], axis=1))
-        completed += args.batch
-        total_tokens += args.batch * args.gen_len
+        # padded wave slots are compute overhead, not served traffic: count
+        # only real requests or decode_tokens_per_s overstates throughput
+        outputs.append(
+            np.concatenate([np.asarray(g) for g in gen], axis=1)[:n_real])
+        completed += n_real
+        total_tokens += n_real * args.gen_len
     wall = time.perf_counter() - t0
     result = {
         "arch": cfg.name,

@@ -17,10 +17,8 @@ import argparse
 import json
 import statistics
 import time
-from pathlib import Path
 
 import jax
-import numpy as np
 
 from repro.ckpt.checkpoint import Checkpointer
 from repro.configs import get_config

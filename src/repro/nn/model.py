@@ -13,7 +13,7 @@ build_model(cfg) returns a Model with a uniform surface:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -8,9 +8,7 @@ No optax dependency — the optimizer is part of the substrate we must build.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

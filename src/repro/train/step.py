@@ -4,8 +4,6 @@ gradient accumulation (scan) and int8 error-feedback gradient compression.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 

@@ -1,0 +1,217 @@
+"""Incremental-engine tests: corpus memoisation (validate once per
+fingerprint), artifact-cache warm paths (no GPO re-runs), and unified
+invalidation keyed on (UPD fingerprint, hardware flags, generator version)
+— ISSUE 2 acceptance criteria."""
+
+import textwrap
+
+import pytest
+
+from repro.core import (GenConfig, corpus_cache_clear, generate_all,
+                        generate_library, load_library)
+from repro.core.generate import GenerateGPO
+from repro.core.validate import ValidateGPO
+
+
+@pytest.fixture()
+def counted(monkeypatch):
+    """Count ValidateGPO/GenerateGPO invocations via class-level patches."""
+    counts = {"validate": 0, "generate": 0}
+    real_validate = ValidateGPO.run
+    real_generate = GenerateGPO.run
+
+    def count_validate(self, ctx):
+        counts["validate"] += 1
+        return real_validate(self, ctx)
+
+    def count_generate(self, ctx):
+        counts["generate"] += 1
+        return real_generate(self, ctx)
+
+    monkeypatch.setattr(ValidateGPO, "run", count_validate)
+    monkeypatch.setattr(GenerateGPO, "run", count_generate)
+    return counts
+
+
+def test_generate_all_validates_once(tmp_path, counted):
+    """Regenerating a SECOND (and third) target from a warm corpus performs
+    zero re-validation — the corpus phase ran exactly once."""
+    corpus_cache_clear()
+    out = generate_all(["cpu_xla", "pallas_interpret", "gpu_pallas"],
+                       tmp_path, force=True)
+    assert set(out) == {"cpu_xla", "pallas_interpret", "gpu_pallas"}
+    for pkg_dir in out.values():
+        assert (pkg_dir / "_manifest.json").exists()
+    assert counted["validate"] == 1
+    assert counted["generate"] == 3
+
+
+def test_load_library_warm_path_runs_no_gpo(tmp_path, counted):
+    """Repeated load_library() with unchanged fingerprint + hardware flags is
+    served from the artifact cache: GenerateGPO does not re-run."""
+    lib1 = load_library("cpu_xla", build_root=tmp_path)
+    generated_after_cold = counted["generate"]
+    assert generated_after_cold == 1
+    lib2 = load_library("cpu_xla", build_root=tmp_path)
+    assert counted["generate"] == generated_after_cold    # warm: zero re-runs
+    assert lib2 is lib1
+
+
+def _upd(root, flag="v1"):
+    (root / "targets").mkdir(parents=True, exist_ok=True)
+    (root / "primitives").mkdir(parents=True, exist_ok=True)
+    (root / "targets" / "toy.yaml").write_text(textwrap.dedent(f"""\
+    ---
+    name: "toy"
+    lscpu_flags: ["xla", "{flag}"]
+    ctypes: ["float32"]
+    ...
+    """))
+    (root / "primitives" / "toy.yaml").write_text(textwrap.dedent("""\
+    ---
+    primitive_name: "toy_add"
+    group: "toy"
+    parameters:
+      - {name: "a", ctype: "register"}
+      - {name: "b", ctype: "register"}
+    returns: {ctype: "register"}
+    definitions:
+      - target_extension: "toy"
+        ctype: ["float32"]
+        lscpu_flags: ["xla"]
+        implementation: |
+          return a + b
+    testing:
+      - name: "adds"
+        requires: []
+        implementation: |
+          a = ctx.array((2, 4), ctype)
+          b = ctx.array((2, 4), ctype)
+          ctx.allclose(ops.toy_add(a, b),
+                       np.asarray(a, np.float64) + np.asarray(b, np.float64), ctype)
+    ...
+    """))
+
+
+def test_fingerprint_change_forces_regeneration(tmp_path):
+    upd = tmp_path / "upd"
+    _upd(upd)
+    cfg = GenConfig(target="toy", upd_paths=(str(upd),))
+    dir1, res1 = generate_library(cfg, tmp_path / "cache")
+    assert res1 is not None                              # cold: pipeline ran
+    dir1b, res1b = generate_library(cfg, tmp_path / "cache")
+    assert dir1b == dir1 and res1b is None               # warm: cache hit
+    # editing any UPD document changes the fingerprint -> new artifact
+    _upd(upd, flag="v2")
+    dir2, res2 = generate_library(cfg, tmp_path / "cache")
+    assert res2 is not None
+    assert dir2 != dir1
+
+
+def test_hardware_flag_change_forces_regeneration(tmp_path):
+    upd = tmp_path / "upd"
+    _upd(upd)
+    base = dict(upd_paths=(str(upd),))
+    d1, r1 = generate_library(
+        GenConfig(target="toy", hardware_flags=("xla",), **base),
+        tmp_path / "cache")
+    d2, r2 = generate_library(
+        GenConfig(target="toy", hardware_flags=("xla", "v1"), **base),
+        tmp_path / "cache")
+    assert r1 is not None and r2 is not None
+    assert d1 != d2                                      # hardware keys the artifact
+    # identical probe -> hit
+    d3, r3 = generate_library(
+        GenConfig(target="toy", hardware_flags=("xla",), **base),
+        tmp_path / "cache")
+    assert d3 == d1 and r3 is None
+
+
+def test_generator_version_bump_forces_regeneration(tmp_path, monkeypatch):
+    upd = tmp_path / "upd"
+    _upd(upd)
+    cfg = GenConfig(target="toy", upd_paths=(str(upd),))
+    d1, _ = generate_library(cfg, tmp_path / "cache")
+    from repro.core import cache as cache_mod
+
+    monkeypatch.setattr(cache_mod, "GENERATOR_VERSION", "999.0.0-test")
+    d2, r2 = generate_library(cfg, tmp_path / "cache")
+    assert r2 is not None                                # bump retired the artifact
+    assert d2 != d1
+
+
+def test_cache_key_and_index_recorded(tmp_path):
+    upd = tmp_path / "upd"
+    _upd(upd)
+    cfg = GenConfig(target="toy", upd_paths=(str(upd),))
+    pkg_dir, _ = generate_library(cfg, tmp_path / "cache")
+    import json
+
+    key = json.loads((pkg_dir / "_cache_key.json").read_text())
+    assert key["target"] == "toy"
+    assert key["hardware_flags"] == ["v1", "xla"]        # sorted probe flags
+    assert key["generator_version"]
+    from repro.core import ArtifactCache
+
+    stats = ArtifactCache(tmp_path / "cache").stats()
+    assert pkg_dir.name in stats["index"]
+    assert stats["index"][pkg_dir.name]["digest"] == key["digest"]
+
+
+def test_bench_winner_store_is_hardware_keyed(tmp_path):
+    """Bench winners share the package's content address minus the variant:
+    same corpus + target on different hardware -> different bench entries."""
+    from repro.core.cache import ArtifactCache, CacheKey
+
+    store = ArtifactCache(tmp_path)
+    k1 = CacheKey("fp", "cpu_xla", ("xla",), "2.0.0", "deadbeef")
+    k2 = CacheKey("fp", "cpu_xla", ("avx512", "xla"), "2.0.0", "deadbeef")
+    assert store.bench_path(k1) != store.bench_path(k2)
+    # ...but variant-independent: all package flavours share one winner file
+    k3 = CacheKey("fp", "cpu_xla", ("xla",), "2.0.0", "cafecafe")
+    assert store.bench_path(k1) == store.bench_path(k3)
+    store.bench_store(k1, {"p/float32": {"winner": 1}})
+    assert store.bench_load(k3) == {"p/float32": {"winner": 1}}
+    assert store.bench_load(k2) == {}
+
+
+def test_bench_selection_persists_winners(tmp_path):
+    """Regression: on targets where primitives have ≥2 valid candidates the
+    measured winners must land in the unified bench store (a bad key once
+    crashed bench_store after the first real benchmark)."""
+    import json
+
+    lib = load_library("pallas_interpret", only=("hadd",),
+                       use_bench_selection=True, build_root=tmp_path)
+    assert "hadd" in lib.PRIMITIVES
+    benches = list((tmp_path / "bench").glob("pallas_interpret_*.json"))
+    assert len(benches) == 1
+    data = json.loads(benches[0].read_text())
+    assert "hadd/float32" in data
+    assert "winner" in data["hadd/float32"]
+    assert len(data["hadd/float32"]["times_us"]) >= 2
+    # second generation of a different variant reuses the same winner file
+    _, res2 = generate_library(
+        GenConfig(target="pallas_interpret", only=("hadd",),
+                  use_bench_selection=True, emit_docs=True),
+        tmp_path)
+    assert res2 is not None
+    assert list((tmp_path / "bench").glob("*.json")) == benches
+
+
+def test_cli_generate_and_cache_roundtrip(tmp_path, capsys):
+    from repro.core.cli import main
+
+    upd = tmp_path / "upd"
+    _upd(upd)
+    rc = main(["generate", "--targets", "toy", "--upd-path", str(upd),
+               "--build-root", str(tmp_path / "cache")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "toy:" in out
+    rc = main(["cache", "stats", "--build-root", str(tmp_path / "cache")])
+    assert rc == 0
+    assert "toy" in capsys.readouterr().out
+    rc = main(["cache", "clear", "--build-root", str(tmp_path / "cache")])
+    assert rc == 0
+    assert "removed" in capsys.readouterr().out

@@ -2,8 +2,6 @@
 async writer, and restart-continuation through the training launcher."""
 
 import json
-import shutil
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

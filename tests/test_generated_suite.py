@@ -5,8 +5,6 @@ of our own CI."""
 
 import importlib
 
-import pytest
-
 
 def _generated_tests(lib):
     mod = importlib.import_module(lib.__name__ + ".tests.test_generated")

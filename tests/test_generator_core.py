@@ -2,8 +2,8 @@
 
 import pytest
 
-from repro.core import GenConfig, GenerationError, core_pipeline
-from repro.core.model import Context
+from repro.core import CorpusPipeline, GenConfig, GenerationError, core_pipeline
+from repro.core.model import CorpusBuild
 from repro.core.pipeline import Pipeline, TemplateCheckGPO
 from repro.core.schema import Entry, PRIMITIVE_SCHEMA, Schema, TARGET_SCHEMA
 from repro.core.validate import ValidateGPO
@@ -51,7 +51,7 @@ def test_bool_is_not_int():
 
 
 def test_validate_gpo_rejects_unknown_target_reference():
-    ctx = Context(config=GenConfig(target="cpu_xla"))
+    ctx = CorpusBuild()
     ctx.raw_targets = [{"name": "cpu_xla", "lscpu_flags": ["xla"],
                         "ctypes": ["float32"]}]
     ctx.raw_primitives = [{
@@ -64,7 +64,7 @@ def test_validate_gpo_rejects_unknown_target_reference():
 
 
 def test_validate_gpo_warns_on_untested_primitive():
-    ctx = Context(config=GenConfig(target="cpu_xla"))
+    ctx = CorpusBuild()
     ctx.raw_targets = [{"name": "cpu_xla", "lscpu_flags": ["xla"],
                         "ctypes": ["float32"]}]
     ctx.raw_primitives = [{
@@ -81,7 +81,9 @@ def test_pipeline_is_exchangeable():
     config = GenConfig(target="cpu_xla")
     pipe = core_pipeline(config)
     names = pipe.names()
-    assert names[:4] == ["template-check", "validate", "select", "generate"]
+    assert names[:2] == ["select", "generate"]
+    # corpus-phase GPOs run once per fingerprint, not per target
+    assert CorpusPipeline().names() == ["template-check", "validate"]
 
     class NoopGPO:
         name = "noop"
@@ -100,6 +102,32 @@ def test_pipeline_replace_unknown_raises():
     pipe = Pipeline([TemplateCheckGPO()])
     with pytest.raises(KeyError):
         pipe.replace("nope", TemplateCheckGPO())
+
+
+def test_pipeline_insert_after_unknown_raises():
+    pipe = Pipeline([TemplateCheckGPO()])
+    with pytest.raises(KeyError, match="nope"):
+        pipe.insert_after("nope", TemplateCheckGPO())
+
+
+def test_pipeline_replace_swaps_in_place():
+    class A:
+        name = "a"
+
+        def run(self, ctx):
+            return ctx
+
+    class B:
+        name = "b"
+
+        def run(self, ctx):
+            return ctx
+
+    pipe = Pipeline([A(), TemplateCheckGPO()])
+    pipe.replace("a", B())
+    assert pipe.names() == ["b", "template-check"]
+    with pytest.raises(KeyError):
+        pipe.replace("a", B())         # old name is gone after the swap
 
 
 def test_full_pipeline_fails_on_bad_target():

@@ -4,7 +4,7 @@ import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import GenConfig
-from repro.core.model import Context, ImplDef, ParamDef, PrimitiveDef
+from repro.core.model import CorpusIR, GenerationResult, ImplDef, ParamDef, PrimitiveDef
 from repro.core.select import SelectGPO, choose, score, valid_candidates
 
 
@@ -82,15 +82,17 @@ def test_selection_invariants(hw, impls):
 
 def test_non_native_selection_warns():
     """Paper §3.2: non-native workaround => build-time warning (Fig 6)."""
-    ctx = Context(config=GenConfig(target="t"))
     from repro.core.model import TargetDef
 
-    ctx.targets["t"] = TargetDef(
+    tgt = TargetDef(
         name="t", vendor="v", flags=("xla",), ctypes=("float32",),
         default_ctype="float32", lanes=128, sublanes=8, mxu=(128, 128),
         vmem_bytes=1, hbm_bytes=1, peak_flops_bf16=1.0, hbm_bw=1.0,
         ici_bw=1.0, ici_links=1)
-    ctx.primitives["p"] = _prim([_impl(flags=("xla",), native=False)])
+    corpus = CorpusIR.from_defs(
+        targets={"t": tgt},
+        primitives={"p": _prim([_impl(flags=("xla",), native=False)])})
+    ctx = GenerationResult(config=GenConfig(target="t"), corpus=corpus)
     SelectGPO().run(ctx)
     assert any("non-native workaround" in w for w in ctx.warnings)
 

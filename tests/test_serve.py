@@ -1,0 +1,13 @@
+"""Serving-path regression: throughput accounting must count served requests,
+not padded wave slots (padding is compute overhead, not traffic)."""
+
+from repro.launch.serve import main
+
+
+def test_serve_counts_only_real_requests():
+    # 5 requests with batch 4 -> second wave is 1 real + 3 padded slots
+    result = main(["--arch", "qwen1.5-0.5b", "--reduced", "--batch", "4",
+                   "--prompt-len", "8", "--gen-len", "4", "--requests", "5"])
+    assert result["requests"] == 5          # was 8 with padded-slot counting
+    assert result["decode_tokens_per_s"] > 0
+    assert len(result["sample_output"]) == 4

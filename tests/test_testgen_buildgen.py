@@ -1,13 +1,11 @@
 """Test-generation GPO (DAG/toposort/unsafe) + build-env GPO tests."""
 
-import graphlib
 import json
 from pathlib import Path
 
-import pytest
-
 from repro.core import GenConfig
-from repro.core.model import Context, ImplDef, ParamDef, PrimitiveDef, TargetDef, TestDef
+from repro.core.model import (CorpusIR, GenerationResult, ImplDef, ParamDef,
+                              PrimitiveDef, TargetDef, TestDef)
 from repro.core.select import SelectGPO
 from repro.core.testgen import TestGenGPO
 
@@ -32,10 +30,10 @@ def _prim(name, requires=(), tested=True):
 
 
 def _ctx(prims):
-    ctx = Context(config=GenConfig(target="t", package_name="pkg"))
-    ctx.targets["t"] = _target()
-    for p in prims:
-        ctx.primitives[p.name] = p
+    corpus = CorpusIR.from_defs(targets={"t": _target()},
+                                primitives={p.name: p for p in prims})
+    ctx = GenerationResult(config=GenConfig(target="t", package_name="pkg"),
+                           corpus=corpus)
     SelectGPO().run(ctx)
     return ctx
 

@@ -24,13 +24,14 @@ def _strip(doc):
 
 def test_default_upd_targets_nonempty_and_valid():
     docs = loader.load_raw_targets()
-    assert len(docs) >= 4
+    assert len(docs) >= 5
     names = set()
     for d in docs:
         enriched, errs, _ = TARGET_SCHEMA.apply(_strip(d))
         assert not errs, errs
         names.add(enriched["name"])
-    assert {"cpu_xla", "pallas_interpret", "pallas_tpu", "tpu_v5e"} <= names
+    assert {"cpu_xla", "gpu_pallas", "pallas_interpret", "pallas_tpu",
+            "tpu_v5e"} <= names
     assert len(names) == len(docs), "duplicate target documents"
 
 
