@@ -39,6 +39,36 @@ def run() -> list[str]:
     emit("prim_attention_direct", t_raw, "")
     out.append(f"attention overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
 
+    # training path: flash_attention_bwd (ISSUE 3) — TSL (dq, dk, dv) vs the
+    # oracle VJP that materializes the (Sq, Sk) matrix
+    g = jnp.asarray(rng.normal(size=q.shape), jnp.float32)
+
+    def _bwd_tsl(a):
+        return lib.ops.flash_attention_bwd(a, k, v, g)
+
+    def _bwd_raw(a):
+        _, vjp = jax.vjp(lambda q_, k_, v_: fa_ref.attention(q_, k_, v_),
+                         a, k, v)
+        return vjp(g)
+
+    t_tsl = time_fn(jax.jit(_bwd_tsl), q, n_iter=10)
+    t_raw = time_fn(jax.jit(_bwd_raw), q, n_iter=10)
+    emit("prim_attention_bwd_tsl", t_tsl,
+         f"overhead={(t_tsl-t_raw)/t_raw*100:+.1f}%")
+    emit("prim_attention_bwd_direct", t_raw, "")
+    out.append(f"attention_bwd overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
+
+    # decode path: single-token GQA matvec against a padded KV cache
+    qd = jnp.asarray(rng.normal(size=(2, 8, 1, 64)), jnp.float32)
+    t_tsl = time_fn(jax.jit(lambda a: lib.ops.attention_decode(a, k, v)),
+                    qd, n_iter=30)
+    t_raw = time_fn(jax.jit(lambda a: fa_ref.attention_decode(a, k, v)),
+                    qd, n_iter=30)
+    emit("prim_attention_decode_tsl", t_tsl,
+         f"overhead={(t_tsl-t_raw)/t_raw*100:+.1f}%")
+    emit("prim_attention_decode_direct", t_raw, "")
+    out.append(f"attention_decode overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
+
     a = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     b = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     t_tsl = time_fn(jax.jit(lambda x_: lib.ops.matmul(x_, b)), a)

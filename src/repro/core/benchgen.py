@@ -99,8 +99,14 @@ class BenchSelectGPO:
                 if len(cands) < 2:
                     continue
                 key = f"{name}/{ctype}"
-                if key in cache:
-                    winner_idx = cache[key]["winner"]
+                # smoke mode: one timed iteration — exercises the full
+                # compile+measure path without the measurement cost (CI)
+                n_iter = 1 if ctx.config.bench_smoke else prim.bench["n_iter"]
+                cached = cache.get(key)
+                # a cached winner measured with FEWER iterations than requested
+                # is stale (a smoke sweep must never pin real selection)
+                if cached is not None and cached.get("n_iter", 0) >= n_iter:
+                    winner_idx = cached["winner"]
                 else:
                     # build sample inputs from the UPD bench setup
                     sru = tgt.as_render_dict()
@@ -114,7 +120,7 @@ class BenchSelectGPO:
                     for impl in cands:
                         try:
                             fn = _compile_candidate(ctx, prim, impl, ctype)
-                            t = _time_candidate(fn, args, prim.bench["n_iter"])
+                            t = _time_candidate(fn, args, n_iter)
                         except Exception as e:  # candidate broken on host
                             ctx.warn(f"bench-select {key}: candidate failed ({e})")
                             t = float("inf")
@@ -125,6 +131,7 @@ class BenchSelectGPO:
                         "winner": winner_idx,
                         "times_us": [t * 1e6 for t in times],
                         "candidates": [prim.definitions.index(c) for c in cands],
+                        "n_iter": n_iter,
                     }
                 impl = prim.definitions[winner_idx]
                 if sels[ctype].impl is not impl:

@@ -191,3 +191,33 @@ class ArtifactCache:
         if self._index_path.exists():
             self._index_path.unlink()
         return n
+
+    def gc(self, max_age_days: float, *, now: float | None = None) -> int:
+        """Age-based eviction: drop packages and bench entries whose artifacts
+        were last written more than ``max_age_days`` ago. Recently re-generated
+        (touched) artifacts survive; the index is pruned to match. Returns the
+        number of entries removed — ``stats``/``clear`` semantics unchanged."""
+        import time
+
+        cutoff = (now if now is not None else time.time()) \
+            - max_age_days * 86400.0
+        removed = 0
+        idx = self._index()
+        if self.package_root.is_dir():
+            for pkg in list(self.package_root.iterdir()):
+                if not pkg.is_dir():
+                    continue
+                stamp = pkg / "_cache_key.json"
+                mtime = (stamp if stamp.exists() else pkg).stat().st_mtime
+                if mtime < cutoff:
+                    shutil.rmtree(pkg)
+                    idx.pop(pkg.name, None)
+                    removed += 1
+        if self.bench_root.is_dir():
+            for bench in list(self.bench_root.glob("*.json")):
+                if bench.stat().st_mtime < cutoff:
+                    bench.unlink()
+                    removed += 1
+        if removed and self._index_path.exists():
+            self._index_path.write_text(json.dumps(idx, indent=1))
+        return removed

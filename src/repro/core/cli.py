@@ -3,11 +3,16 @@
     python -m repro.core generate --targets cpu_xla,pallas_interpret
     python -m repro.core generate --all --force
     python -m repro.core corpus
+    python -m repro.core bench --report bench-report.json
+    python -m repro.core bench --smoke
     python -m repro.core cache stats
     python -m repro.core cache clear
+    python -m repro.core cache gc --max-age-days 30
 
 The paper drives its generator from a ``main.py`` invoked by cmake; this is
-the JAX-analogue entry point, plus artifact-cache maintenance.
+the JAX-analogue entry point, plus artifact-cache maintenance and the §4.2
+"ongoing process" bench sweep that warms measured block-size/variant winners
+for every host-runnable target under the probed hardware key.
 """
 
 from __future__ import annotations
@@ -70,6 +75,54 @@ def _cmd_corpus(args) -> int:
     return 0
 
 
+def _cmd_bench(args) -> int:
+    """Warm bench-selection winners for every host-runnable target and emit a
+    JSON report of winners per (target, primitive, hardware key)."""
+    from .corpus import load_corpus
+    from .library import (DEFAULT_BUILD_ROOT, artifact_key, generate_library)
+    from .cache import ArtifactCache
+    from .model import GenConfig
+
+    upd_paths = tuple(args.upd_path)
+    corpus = load_corpus(upd_paths)
+    if args.targets:
+        names = [t for chunk in args.targets for t in chunk.split(",") if t]
+        unknown = sorted(set(names) - set(corpus.targets))
+        if unknown:
+            print(f"error: unknown target(s) {unknown}", file=sys.stderr)
+            return 2
+        not_host = [t for t in names if not corpus.targets[t].runs_on_host]
+        if not_host:
+            print(f"error: target(s) {not_host} do not run on this host",
+                  file=sys.stderr)
+            return 2
+    else:
+        names = [t for t in sorted(corpus.targets)
+                 if corpus.targets[t].runs_on_host]
+    build_root = Path(args.build_root) if args.build_root else DEFAULT_BUILD_ROOT
+    store = ArtifactCache(build_root)
+    report: dict = {"smoke": args.smoke, "targets": {}}
+    for name in names:
+        cfg = GenConfig(target=name, upd_paths=upd_paths,
+                        use_bench_selection=True, bench_smoke=args.smoke)
+        # force: the sweep's job is to (re-)measure, not to hit the package
+        # cache; already-measured winners are still reused from the bench store
+        _, res = generate_library(cfg, build_root, force=True, corpus=corpus)
+        key = artifact_key(cfg, corpus.fingerprint, corpus)
+        winners = store.bench_load(key)
+        report["targets"][name] = {
+            "hardware_flags": list(key.hardware_flags),
+            "bench_entry": store.bench_path(key).name,
+            "winners": winners,
+            "warnings": [w for w in (res.warnings if res else [])
+                         if "bench" in w],
+        }
+    print(json.dumps(report, indent=1))
+    if args.report:
+        Path(args.report).write_text(json.dumps(report, indent=1))
+    return 0
+
+
 def _cmd_cache(args) -> int:
     from .cache import ArtifactCache
     from .library import DEFAULT_BUILD_ROOT
@@ -78,6 +131,11 @@ def _cmd_cache(args) -> int:
                           else DEFAULT_BUILD_ROOT)
     if args.action == "stats":
         print(json.dumps(store.stats(), indent=1))
+    elif args.action == "gc":
+        if args.max_age_days is None:
+            print("error: cache gc requires --max-age-days N", file=sys.stderr)
+            return 2
+        print(f"removed {store.gc(args.max_age_days)} expired artifact(s)")
     else:  # clear
         print(f"removed {store.clear()} cached artifact(s)")
     return 0
@@ -110,9 +168,24 @@ def build_parser() -> argparse.ArgumentParser:
                    help="print every corpus warning")
     c.set_defaults(fn=_cmd_corpus)
 
+    b = sub.add_parser(
+        "bench", help="warm bench-selection winners for host-runnable targets")
+    _add_common(b)
+    b.add_argument("--targets", action="append", default=[],
+                   help="comma-separated host-runnable targets "
+                        "(default: every runs_on_host target)")
+    b.add_argument("--report", default=None,
+                   help="also write the JSON winners report to this path")
+    b.add_argument("--smoke", action="store_true",
+                   help="single-iteration smoke sweep (CI: exercises the "
+                        "benchgen path without the measurement cost)")
+    b.set_defaults(fn=_cmd_bench)
+
     k = sub.add_parser("cache", help="artifact-cache maintenance")
     _add_common(k)
-    k.add_argument("action", choices=("stats", "clear"))
+    k.add_argument("action", choices=("stats", "clear", "gc"))
+    k.add_argument("--max-age-days", type=float, default=None,
+                   help="gc: evict artifacts older than this many days")
     k.set_defaults(fn=_cmd_cache)
     return ap
 

@@ -262,5 +262,6 @@ class GenConfig:
     emit_docs: bool = False
     emit_build: bool = True
     use_bench_selection: bool = False    # beyond-paper §4.2 adaptive selection
+    bench_smoke: bool = False            # cap bench n_iter at 1 (CI path check)
     upd_paths: tuple[str, ...] = ()      # extra UPD search paths (extensibility studies)
     build_root: str | None = None        # artifact-cache root (None -> build/tsl)

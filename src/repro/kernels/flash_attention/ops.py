@@ -1,9 +1,13 @@
 """Public wrapper: pads sequence dims to block multiples, restores shape.
 
-Differentiable: the forward pass is the Pallas kernel; the backward pass is
-a custom VJP through the jnp oracle (correct, memory-heavier than a flash
-backward kernel — the dedicated dq/dk/dv kernel is recorded future work in
-DESIGN.md). Training through the TPU-target TSL therefore works today.
+Differentiable end-to-end in Pallas: the forward kernel emits per-row
+logsumexp residuals and the backward runs dedicated recomputation kernels —
+a q-tiled pass for dq and a k-tiled pass for dk/dv (GQA head groups reduced
+outside the kernel in f32). The ``custom_vjp`` therefore saves only
+O(Sq)-per-head state (inputs + out + lse); the (Sq, Sk) attention matrix is
+never materialized on the training path. ``flash_attention_vjp`` exposes the
+same backward directly for the UPD ``flash_attention_bwd`` primitive, where
+block sizes are owned by the §4.2 bench-selection machinery.
 """
 
 from __future__ import annotations
@@ -11,6 +15,7 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
 from ..common import pad_to
 from . import kernel, ref
@@ -29,17 +34,49 @@ def _fa(causal, scale, kv_len, block_q, block_k, interpret, q, k, v):
 
 
 def _fa_fwd(causal, scale, kv_len, block_q, block_k, interpret, q, k, v):
-    return _fa(causal, scale, kv_len, block_q, block_k, interpret, q, k, v), \
-        (q, k, v)
+    qp, _ = pad_to(q, 2, block_q)
+    kp, _ = pad_to(k, 2, block_k)
+    vp, _ = pad_to(v, 2, block_k)
+    out, lse = kernel.flash_attention_fwd_4d(
+        qp, kp, vp, causal=causal, scale=scale, kv_len=kv_len,
+        q_offset=kv_len - q.shape[2], block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    sq = q.shape[2]
+    # residuals are O(Sq) per head: inputs + out + logsumexp — no S×S tensor
+    return out[:, :, :sq], (q, k, v, out[:, :, :sq], lse[:, :, :sq])
+
+
+def _fa_bwd_kernels(q, k, v, g, out, lse, *, causal, scale, kv_len,
+                    block_q, block_k, interpret):
+    """Shared backward body: pad to block multiples, run dq + dk/dv kernels,
+    reduce GQA head groups, slice back to logical shapes."""
+    b, h, sq, d = q.shape
+    _, kh, sk, _ = k.shape
+    group = h // kh
+    q_offset = kv_len - sq
+    delta = jnp.sum(g.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    qp, _ = pad_to(q, 2, block_q)
+    gp, _ = pad_to(g.astype(q.dtype), 2, block_q)
+    lsep, _ = pad_to(lse, 2, block_q)
+    deltap, _ = pad_to(delta, 2, block_q)
+    kp, _ = pad_to(k, 2, block_k)
+    vp, _ = pad_to(v, 2, block_k)
+    common = dict(causal=causal, scale=scale, kv_len=kv_len, q_offset=q_offset,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+    dq = kernel.flash_attention_bwd_dq_4d(qp, kp, vp, gp, lsep, deltap, **common)
+    dkf, dvf = kernel.flash_attention_bwd_dkv_4d(qp, kp, vp, gp, lsep, deltap,
+                                                 **common)
+    skp = dkf.shape[2]
+    dk = dkf.reshape(b, kh, group, skp, d).sum(2)[:, :, :sk].astype(k.dtype)
+    dv = dvf.reshape(b, kh, group, skp, d).sum(2)[:, :, :sk].astype(v.dtype)
+    return dq[:, :, :sq], dk, dv
 
 
 def _fa_bwd(causal, scale, kv_len, block_q, block_k, interpret, res, g):
-    q, k, v = res
-    _, vjp = jax.vjp(
-        lambda q_, k_, v_: ref.attention(q_, k_, v_, causal=causal,
-                                         scale=scale, kv_len=kv_len),
-        q, k, v)
-    return vjp(g)
+    q, k, v, out, lse = res
+    return _fa_bwd_kernels(q, k, v, g, out, lse, causal=causal, scale=scale,
+                           kv_len=kv_len, block_q=block_q, block_k=block_k,
+                           interpret=interpret)
 
 
 _fa.defvjp(_fa_fwd, _fa_bwd)
@@ -62,4 +99,27 @@ def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
     return _fa(causal, scale, kv_len, bq, bk, interpret, q, k, v)
 
 
-__all__ = ["flash_attention", "ref"]
+@partial(jax.jit, static_argnames=("causal", "scale", "kv_len", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention_vjp(q, k, v, g, *, causal: bool = True,
+                        scale: float | None = None, kv_len: int | None = None,
+                        block_q: int = 512, block_k: int = 512,
+                        interpret: bool = False):
+    """Standalone (dq, dk, dv) for cotangent ``g`` — the UPD
+    ``flash_attention_bwd`` entry point. Re-runs the residual-emitting
+    forward, then the recomputation backward kernels; peak memory stays
+    O(Sq + Sk) per head for any sequence length."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(block_q, max(8, sq))
+    bk = min(block_k, max(128, sk))
+    kv_len = kv_len if kv_len is not None else sk
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    _, (q, k, v, out, lse) = _fa_fwd(causal, sc, kv_len, bq, bk, interpret,
+                                     q, k, v)
+    return _fa_bwd_kernels(q, k, v, g, out, lse, causal=causal, scale=sc,
+                           kv_len=kv_len, block_q=bq, block_k=bk,
+                           interpret=interpret)
+
+
+__all__ = ["flash_attention", "flash_attention_vjp", "ref"]

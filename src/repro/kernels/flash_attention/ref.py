@@ -21,7 +21,10 @@ def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
               kv_len: int | None = None):
     """q: (B,H,Sq,D); k,v: (B,KH,Sk,D) with H % KH == 0. Returns (B,H,Sq,D).
 
-    kv_len masks out key positions >= kv_len (padding)."""
+    kv_len masks out key positions >= kv_len (padding) AND, like the Pallas
+    kernel and :func:`attention_chunked`, sets the causal alignment: the last
+    q row sits at logical position kv_len - 1, not Sk - 1 (prefill
+    continuation against a padded cache)."""
     b, h, sq, d = q.shape
     _, kh, sk, _ = k.shape
     assert h % kh == 0, (h, kh)
@@ -33,7 +36,8 @@ def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
                    k.astype(jnp.float32)) * scale
     neg = jnp.float32(-1e30)
     if causal:
-        qi = jnp.arange(sq)[:, None] + (sk - sq)  # align ends (prefill/decode)
+        end = kv_len if kv_len is not None else sk
+        qi = jnp.arange(sq)[:, None] + (end - sq)  # align ends (prefill/decode)
         ki = jnp.arange(sk)[None, :]
         s = jnp.where(qi >= ki, s, neg)
     if kv_len is not None:

@@ -215,3 +215,130 @@ def test_cli_generate_and_cache_roundtrip(tmp_path, capsys):
     rc = main(["cache", "clear", "--build-root", str(tmp_path / "cache")])
     assert rc == 0
     assert "removed" in capsys.readouterr().out
+
+
+def test_cache_gc_age_eviction(tmp_path):
+    """cache gc --max-age-days: evicts only stale packages/bench entries,
+    prunes the index to match, and leaves stats/clear semantics intact."""
+    import os
+    import time
+
+    from repro.core import ArtifactCache
+
+    upd = tmp_path / "upd"
+    _upd(upd)
+    cfg = GenConfig(target="toy", upd_paths=(str(upd),))
+    pkg_dir, _ = generate_library(cfg, tmp_path / "cache")
+    store = ArtifactCache(tmp_path / "cache")
+    from repro.core.cache import CacheKey
+
+    fresh_key = CacheKey("fp", "toy", ("xla",), "2.0.0")
+    store.bench_store(fresh_key, {"p/float32": {"winner": 0}})
+    stale_bench = store.bench_root / "toy_deadbeefdeadbeef.json"
+    stale_bench.write_text("{}")
+    old = time.time() - 10 * 86400
+    os.utime(pkg_dir / "_cache_key.json", (old, old))
+    os.utime(stale_bench, (old, old))
+
+    # nothing is young enough to die at 30 days
+    assert store.gc(30) == 0
+    # at 5 days the aged package and aged bench entry go, the fresh one stays
+    assert store.gc(5) == 2
+    assert not pkg_dir.exists()
+    assert store.bench_path(fresh_key).exists()
+    stats = store.stats()
+    assert pkg_dir.name not in stats["index"]
+    assert pkg_dir.name not in stats["packages"]
+
+    # regeneration after gc is a clean cold start
+    pkg_dir2, res2 = generate_library(cfg, tmp_path / "cache")
+    assert res2 is not None and pkg_dir2.exists()
+
+
+def test_cli_cache_gc(tmp_path, capsys):
+    from repro.core.cli import main
+
+    upd = tmp_path / "upd"
+    _upd(upd)
+    assert main(["generate", "--targets", "toy", "--upd-path", str(upd),
+                 "--build-root", str(tmp_path / "cache")]) == 0
+    capsys.readouterr()
+    # gc without --max-age-days is a usage error
+    assert main(["cache", "gc", "--build-root", str(tmp_path / "cache")]) == 2
+    capsys.readouterr()
+    rc = main(["cache", "gc", "--max-age-days", "30",
+               "--build-root", str(tmp_path / "cache")])
+    assert rc == 0
+    assert "removed 0 expired" in capsys.readouterr().out
+
+
+def test_cli_bench_sweep_persists_flash_attention_winners(tmp_path, capsys):
+    """ISSUE 3 acceptance: `python -m repro.core bench` runs end-to-end on CPU
+    and persists flash_attention fwd+bwd block-size winners into the
+    content-addressed cache under the probed hardware key."""
+    import json
+
+    from repro.core.cli import main
+
+    rc = main(["bench", "--smoke", "--targets", "pallas_interpret",
+               "--build-root", str(tmp_path / "cache"),
+               "--report", str(tmp_path / "report.json")])
+    assert rc == 0
+    report = json.loads((tmp_path / "report.json").read_text())
+    assert report["smoke"] is True
+    tgt = report["targets"]["pallas_interpret"]
+    assert tgt["hardware_flags"]                  # probed hardware key recorded
+    winners = tgt["winners"]
+    for key in ("flash_attention/float32", "flash_attention_bwd/float32"):
+        assert key in winners, sorted(winners)
+        assert len(winners[key]["times_us"]) >= 2  # ≥2 block-size candidates
+    # winners live in the unified hardware-keyed bench store
+    bench_file = tmp_path / "cache" / "bench" / tgt["bench_entry"]
+    assert bench_file.exists()
+    persisted = json.loads(bench_file.read_text())
+    assert "flash_attention_bwd/float32" in persisted
+    # a second sweep reuses the persisted winners (no re-measure): same file
+    capsys.readouterr()
+    assert main(["bench", "--smoke", "--targets", "pallas_interpret",
+                 "--build-root", str(tmp_path / "cache")]) == 0
+    assert json.loads(bench_file.read_text()) == persisted
+
+
+def test_bench_smoke_winners_do_not_pin_real_selection(tmp_path, capsys):
+    """A smoke sweep (n_iter=1) must not permanently replace real adaptive
+    selection: a later full-iteration sweep re-measures stale smoke entries."""
+    import json
+
+    from repro.core.cli import main
+
+    root = str(tmp_path / "cache")
+    assert main(["bench", "--smoke", "--targets", "cpu_xla",
+                 "--build-root", root,
+                 "--report", str(tmp_path / "smoke.json")]) == 0
+    smoke = json.loads((tmp_path / "smoke.json").read_text())
+    w = smoke["targets"]["cpu_xla"]["winners"]["attention_decode/float32"]
+    assert w["n_iter"] == 1
+    capsys.readouterr()
+    assert main(["bench", "--targets", "cpu_xla", "--build-root", root,
+                 "--report", str(tmp_path / "full.json")]) == 0
+    full = json.loads((tmp_path / "full.json").read_text())
+    w2 = full["targets"]["cpu_xla"]["winners"]["attention_decode/float32"]
+    assert w2["n_iter"] > 1                  # re-measured, not reused
+    # ...and the real measurement now sticks: smoke afterwards reuses it
+    capsys.readouterr()
+    assert main(["bench", "--smoke", "--targets", "cpu_xla",
+                 "--build-root", root,
+                 "--report", str(tmp_path / "smoke2.json")]) == 0
+    smoke2 = json.loads((tmp_path / "smoke2.json").read_text())
+    assert smoke2["targets"]["cpu_xla"]["winners"][
+        "attention_decode/float32"]["n_iter"] == w2["n_iter"]
+
+
+def test_cli_bench_rejects_bad_targets(tmp_path, capsys):
+    from repro.core.cli import main
+
+    assert main(["bench", "--targets", "nope",
+                 "--build-root", str(tmp_path / "cache")]) == 2
+    assert main(["bench", "--targets", "pallas_tpu",   # not host-runnable
+                 "--build-root", str(tmp_path / "cache")]) == 2
+    capsys.readouterr()
