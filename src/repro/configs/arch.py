@@ -69,6 +69,14 @@ class ArchConfig:
         return self.family == "ssm"
 
     @property
+    def decode_prefix(self) -> int:
+        """Cache rows the prefill prepends BEFORE the prompt (vlm vision
+        embeddings): they consume decode slot-table budget exactly like
+        prompt tokens, so every serving-side length calculation must add
+        this. Single source of truth for engine/admission/CLI."""
+        return self.vision_prefix if self.family == "vlm" else 0
+
+    @property
     def sub_quadratic(self) -> bool:
         """Can this arch run the long_500k cell? (SSM / hybrid decode paths)."""
         return self.family in ("ssm", "hybrid")

@@ -54,13 +54,16 @@ def attention(q, k, v, *, causal: bool = True, scale: float | None = None,
 
 
 def attention_chunked(q, k, v, *, causal: bool = True, scale: float | None = None,
-                      kv_len: int | None = None, block_k: int = 1024):
+                      kv_len=None, block_k: int = 1024):
     """Flash-style chunked attention in PURE jnp: lax.scan over key blocks
     with an online-softmax carry. The (Sq, Sk) score matrix never
     materializes — per-step working set is (Sq, block_k), so the XLA memory
     roofline drops from O(S²) to O(S·bk). Used as the specialized cpu_xla
     TSL variant (§Perf yi-34b iteration); the Pallas kernel is the same
     algorithm with explicit VMEM tiling.
+
+    ``kv_len`` may be a scalar or a (B,) vector of per-sequence cache fills
+    (continuous batching: each slot sits at its own position).
     """
     b, h, sq, d = q.shape
     _, kh, sk, _ = k.shape
@@ -68,6 +71,7 @@ def attention_chunked(q, k, v, *, causal: bool = True, scale: float | None = Non
     g = h // kh
     scale = scale if scale is not None else 1.0 / (d ** 0.5)
     kv_len = kv_len if kv_len is not None else sk
+    kv_vec = jnp.broadcast_to(jnp.asarray(kv_len), (b,))   # (B,) per-sequence
     bk = min(block_k, sk)
     pad = (-sk) % bk
     if pad:
@@ -78,17 +82,17 @@ def attention_chunked(q, k, v, *, causal: bool = True, scale: float | None = Non
     qg = q.reshape(b, kh, g, sq, d).astype(jnp.float32)
     kb = k.astype(jnp.float32).reshape(b, kh, nk, bk, d).transpose(2, 0, 1, 3, 4)
     vb = v.astype(jnp.float32).reshape(b, kh, nk, bk, d).transpose(2, 0, 1, 3, 4)
-    q_pos = jnp.arange(sq) + (kv_len - sq)
+    q_pos = jnp.arange(sq)[None, :] + (kv_vec[:, None] - sq)   # (B,Sq)
 
     def step(carry, inp):
         m_prev, l_prev, acc = carry
         kt, vt, ki = inp                                  # (B,KH,bk,D) x2
         s = jnp.einsum("bkgqd,bked->bkgqe", qg, kt) * scale  # (B,KH,G,Sq,bk)
         k_pos = ki * bk + jnp.arange(bk)
-        mask = k_pos[None, :] < kv_len
+        mask = k_pos[None, None, :] < kv_vec[:, None, None]      # (B,1,bk)
         if causal:
-            mask = jnp.logical_and(mask, q_pos[:, None] >= k_pos[None, :])
-        s = jnp.where(mask[None, None, None], s, -1e30)
+            mask = jnp.logical_and(mask, q_pos[:, :, None] >= k_pos[None, None, :])
+        s = jnp.where(mask[:, None, None], s, -1e30)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
         p = jnp.exp(s - m_new)
@@ -119,8 +123,10 @@ def attention_decode(q, k_cache, v_cache, *, kv_len=None, scale: float | None = 
     against the cache directly — the KV cache is NEVER head-expanded (the
     broadcast would force GSPMD to reshard/gather the full cache). With the
     cache sequence-sharded (sequence-parallel decode), the softmax reductions
-    become small cross-shard psums. ``kv_len`` may be traced (cache fill).
-    Memory-bound matvec — jnp is the right tool on every target.
+    become small cross-shard psums. ``kv_len`` may be traced (cache fill) and
+    may be a (B,) vector of per-sequence fills (continuous batching: each
+    slot sits at its own position). Memory-bound matvec — jnp is the right
+    tool on every target.
     """
     from repro.dist.sharding import logical_constraint
 
@@ -135,7 +141,10 @@ def attention_decode(q, k_cache, v_cache, *, kv_len=None, scale: float | None = 
                    k_cache.astype(jnp.float32)) * scale
     s = logical_constraint(s, "batch", None, None, "kvseq")
     if kv_len is not None:
-        mask = jnp.arange(s_max)[None, None, None, :] < kv_len
+        kvl = jnp.asarray(kv_len)
+        if kvl.ndim:                       # (B,) per-sequence cache fills
+            kvl = kvl.reshape(b, 1, 1, 1)
+        mask = jnp.arange(s_max)[None, None, None, :] < kvl
         s = jnp.where(mask, s, jnp.float32(-1e30))
     p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)

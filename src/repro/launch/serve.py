@@ -1,33 +1,41 @@
-"""Serving launcher: batched prefill + decode with continuous-batching-lite
-(finished sequences are replaced from a request queue between decode steps).
+"""Serving launcher: thin CLI over repro.serve.ServeEngine (per-step
+continuous batching — a freed slot is refilled before the next decode step,
+admission is cost-model gated, and sampling is configurable).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
-        --batch 4 --prompt-len 32 --gen-len 32 --requests 8
+        --batch 4 --prompt-len 32 --gen-len 32 --requests 8 \
+        --temperature 0.8 --top-k 40 --sla-ms 500
 """
 
 from __future__ import annotations
 
 import argparse
 import json
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.nn.model import build_model
+from repro.serve import Request, SamplingConfig, ServeEngine
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="slot-table size (decode batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy argmax")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation (0 = full distribution)")
+    ap.add_argument("--sla-ms", type=float, default=None,
+                    help="per-request end-to-end deadline; feeds both "
+                         "cost-model admission and the hit-rate report")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -36,60 +44,38 @@ def main(argv=None) -> dict:
     # serving different archs in one process: drop jit caches so recycled
     # function ids from a previous model cannot alias stale executables
     jax.clear_caches()
-    model = build_model(cfg)
-    key = jax.random.PRNGKey(args.seed)
-    params = model.init(key)
-    max_len = args.prompt_len + args.gen_len
+
+    # budget the slot table for the decode prefix (vlm vision rows) or
+    # admission would refuse every request by construction
+    engine = ServeEngine(
+        cfg, batch=args.batch,
+        max_len=cfg.decode_prefix + args.prompt_len + args.gen_len,
+        sampling=SamplingConfig(temperature=args.temperature,
+                                top_k=args.top_k),
+        seed=args.seed,
+        enc_len=args.prompt_len if cfg.family == "audio" else None)
 
     rng = np.random.default_rng(args.seed)
-    pending = [rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32)
-               for _ in range(args.requests)]
-    completed = 0
-    total_tokens = 0
+    sla_s = args.sla_ms / 1e3 if args.sla_ms is not None else None
+    requests = [
+        Request(rid=f"req{i}",
+                tokens=rng.integers(0, cfg.vocab, args.prompt_len
+                                    ).astype(np.int32),
+                gen_len=args.gen_len, sla_s=sla_s)
+        for i in range(args.requests)
+    ]
 
-    # jit the per-model callables directly (NOT same-source lambdas: two
-    # serve_main calls in one process would otherwise collide in jit's
-    # code-object keyed cache)
-    prefill = jax.jit(model.prefill, static_argnums=(2,))
-    decode = jax.jit(model.decode_step)
-
-    def make_batch(prompts):
-        batch = {"tokens": jnp.asarray(np.stack(prompts))}
-        if cfg.family == "vlm":
-            batch["vision_embeds"] = jnp.zeros(
-                (len(prompts), cfg.vision_prefix, cfg.d_model), cfg.dtype)
-        if cfg.family == "audio":
-            batch["audio_embeds"] = jnp.zeros(
-                (len(prompts), args.prompt_len, cfg.d_model), cfg.dtype)
-        return batch
-
-    t0 = time.perf_counter()
-    outputs = []
-    while pending:
-        wave, pending = pending[:args.batch], pending[args.batch:]
-        n_real = len(wave)                            # requests actually served
-        while len(wave) < args.batch:                 # pad the wave
-            wave.append(np.zeros(args.prompt_len, np.int32))
-        logits, state = prefill(params, make_batch(wave), max_len)
-        tok = jnp.argmax(logits, axis=-1)[:, None]
-        gen = [tok]
-        for i in range(args.gen_len - 1):
-            pos = jnp.int32(args.prompt_len + i)
-            logits, state = decode(params, state, tok.astype(jnp.int32), pos)
-            tok = jnp.argmax(logits, axis=-1)[:, None]
-            gen.append(tok)
-        # padded wave slots are compute overhead, not served traffic: count
-        # only real requests or decode_tokens_per_s overstates throughput
-        outputs.append(
-            np.concatenate([np.asarray(g) for g in gen], axis=1)[:n_real])
-        completed += n_real
-        total_tokens += n_real * args.gen_len
-    wall = time.perf_counter() - t0
+    report = engine.run(requests)
+    first = report["outputs"].get("req0", [])
     result = {
         "arch": cfg.name,
-        "requests": completed,
-        "decode_tokens_per_s": total_tokens / wall,
-        "sample_output": outputs[0][0][:8].tolist(),
+        "requests": report["requests"],
+        "decode_tokens_per_s": report["decode_tokens_per_s"],
+        "ttft_s_mean": report["ttft_s_mean"],
+        "sla_hit_rate": report["sla_hit_rate"],
+        "padded_slot_steps_steady": report["padded_slot_steps_steady"],
+        "refused": report["refused"],
+        "sample_output": first[:8],
     }
     print("[serve] done:", json.dumps(result))
     return result

@@ -7,6 +7,7 @@ decode path uses tsl.attention_decode + tsl.cache_update (KV cache layout
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.tsl_api import ops as tsl
@@ -101,11 +102,16 @@ def project_kv(p, x, cfg):
 
 
 def attention_decode(p, x_t, k_cache, v_cache, pos, cfg, *, rope: bool = True):
-    """One-token decode. x_t: (B,1,D); caches (B,KH,S_max,hd); pos: scalar.
+    """One-token decode. x_t: (B,1,D); caches (B,KH,S_max,hd); pos: scalar
+    write index, or a (B,) vector of PER-SLOT write indices (continuous
+    batching: each slot of the live batch sits at its own position — RoPE,
+    the cache scatter, and the kv_len mask all become per-slot).
 
     Returns (y (B,1,D), k_cache', v_cache')."""
     b = x_t.shape[0]
     h, kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
     q = tsl.matmul(x_t, p["wq"])
     k = tsl.matmul(x_t, p["wk"])
     v = tsl.matmul(x_t, p["wv"])
@@ -118,16 +124,28 @@ def attention_decode(p, x_t, k_cache, v_cache, pos, cfg, *, rope: bool = True):
         q = tsl.rmsnorm(q, p["q_norm"], eps=cfg.norm_eps)
         k = tsl.rmsnorm(k, p["k_norm"], eps=cfg.norm_eps)
     if rope:
-        cos, sin = rope_tables(jnp.asarray(pos)[None], hd, cfg.rope_theta)
-        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+        if per_slot:
+            cos, sin = rope_tables(pos[:, None], hd, cfg.rope_theta)  # (B,1,hd/2)
+            cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+        else:
+            cos, sin = rope_tables(pos[None], hd, cfg.rope_theta)
+            cos, sin = cos[None, :, None, :], sin[None, :, None, :]
         q = tsl.rope_apply(q, cos, sin)
         k = tsl.rope_apply(k, cos, sin)
     q = q.transpose(0, 2, 1, 3)
-    # cache layout (B,KH,S,hd): update along axis 2 -> move axis for tsl.cache_update (axis 1)
-    k_cache = jnp.swapaxes(
-        tsl.cache_update(jnp.swapaxes(k_cache, 1, 2), k, pos), 1, 2)
-    v_cache = jnp.swapaxes(
-        tsl.cache_update(jnp.swapaxes(v_cache, 1, 2), v, pos), 1, 2)
+    if per_slot:
+        # per-slot scatter: vmap the TSL update over the batch axis, so each
+        # slot writes its own row (cache leaf (KH,S,hd): axis 1 is still S)
+        upd = jax.vmap(tsl.cache_update)
+        k_cache = upd(k_cache, k.transpose(0, 2, 1, 3), pos)
+        v_cache = upd(v_cache, v.transpose(0, 2, 1, 3), pos)
+    else:
+        # cache layout (B,KH,S,hd): update along axis 2 -> move axis for
+        # tsl.cache_update (axis 1)
+        k_cache = jnp.swapaxes(
+            tsl.cache_update(jnp.swapaxes(k_cache, 1, 2), k, pos), 1, 2)
+        v_cache = jnp.swapaxes(
+            tsl.cache_update(jnp.swapaxes(v_cache, 1, 2), v, pos), 1, 2)
     o = tsl.attention_decode(q, k_cache, v_cache, kv_len=pos + 1)
     o = o.transpose(0, 2, 1, 3).reshape(b, 1, h * hd)
     return tsl.matmul(o, p["wo"]), k_cache, v_cache

@@ -132,6 +132,15 @@ def init_encdec_state(cfg, batch: int, max_len: int, enc_len: int, dtype):
     }
 
 
+def state_batch_axes(state):
+    """Slot-axis position per state leaf (serve-layer state surgery): self-
+    attn caches AND the per-request cross K/V are (L, B, KH, S, hd) — the
+    request axis sits at 1. NOTE: cross K/V leaves are sized by the encoder
+    length, so a donor only fits a batched state built with the SAME
+    enc_len (the engine validates this before inserting)."""
+    return {k: 1 for k in state}
+
+
 def encdec_prefill(params, tokens, cfg, *, audio_embeds, max_len: int):
     enc = encode(params, audio_embeds, cfg, remat=False)
 

@@ -132,6 +132,12 @@ def init_decode_state(cfg, batch: int, max_len: int, dtype):
     }
 
 
+def state_batch_axes(state):
+    """Slot-axis position per state leaf (serve-layer state surgery): KV
+    cache leaves are (L, B, KH, S_max, hd) — the request axis sits at 1."""
+    return {k: 1 for k in state}
+
+
 def lm_prefill(params, tokens, cfg, *, max_len: int, vision_embeds=None):
     """Full-sequence prefill; returns (last_logits, decode state)."""
     logits, _, kvs = lm_forward(params, tokens, cfg, vision_embeds=vision_embeds,
@@ -145,7 +151,8 @@ def lm_prefill(params, tokens, cfg, *, max_len: int, vision_embeds=None):
 
 
 def lm_decode_step(params, state, tokens_t, pos, cfg):
-    """tokens_t (B,1); pos scalar int32 (current write index). Returns
+    """tokens_t (B,1); pos: scalar int32 write index, or a (B,) vector of
+    per-slot indices (continuous batching — see attention_decode). Returns
     (logits (B,V), new state)."""
     x = tsl.embed_lookup(params["embed"], tokens_t)
 

@@ -6,7 +6,15 @@ build_model(cfg) returns a Model with a uniform surface:
     forward_logits(params, batch) -> logits
     prefill(params, batch, max_len) -> (last_logits, state)
     decode_step(params, state, tokens_t, pos) -> (logits, state)
+        (pos: scalar, or a (B,) vector of per-slot positions — continuous
+         batching; recurrent families ignore it, attention caches scatter
+         per-slot)
     init_decode_state(batch, max_len) -> zeroed state pytree
+    state_batch_axes(state) -> pytree of slot-axis ints (same treedef)
+    insert_slot(state, donor, slot) / reset_slot(state, slot)
+        (serve-layer state surgery: graft a freshly prefilled request into
+         one slot of a live batched decode state / clear a finished slot —
+         uniform over all four decode families via state_batch_axes)
     input_specs(cell) -> dict[str, ShapeDtypeStruct-compatible jnp dtypes]
 """
 
@@ -39,11 +47,34 @@ class Model:
     _forward: Callable           # (params, batch, remat) -> (logits, aux, _)
     prefill: Callable            # (params, batch, max_len) -> (logits, state)
     decode_step: Callable        # (params, state, tokens, pos) -> (logits, state)
-    init_decode_state: Callable  # (batch, max_len) -> state
+    init_decode_state: Callable  # (batch, max_len, **kw) -> state
+    state_batch_axes: Callable   # (state) -> pytree of slot-axis ints
 
     def forward_logits(self, params, batch, *, remat: bool = False):
         logits, _, _ = self._forward(params, batch, remat)
         return logits
+
+    # -- state surgery (continuous batching: repro.serve builds on these) ----
+
+    def insert_slot(self, state, donor, slot):
+        """Graft a single-request decode state (slot axis of size 1, e.g.
+        straight from ``prefill`` with batch 1) into slot ``slot`` of a live
+        batched state. jit-safe: ``slot`` may be traced."""
+        def ins(leaf, d, ax):
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, d.astype(leaf.dtype), slot, axis=ax)
+
+        return jax.tree.map(ins, state, donor, self.state_batch_axes(state))
+
+    def reset_slot(self, state, slot):
+        """Zero slot ``slot`` (request finished / evicted). jit-safe."""
+        def rst(leaf, ax):
+            shape = list(leaf.shape)
+            shape[ax] = 1
+            return jax.lax.dynamic_update_slice_in_dim(
+                leaf, jnp.zeros(shape, leaf.dtype), slot, axis=ax)
+
+        return jax.tree.map(rst, state, self.state_batch_axes(state))
 
     def loss(self, params, batch, *, remat: bool = True):
         logits, aux, _ = self._forward(params, batch, remat)
@@ -103,8 +134,9 @@ def build_model(cfg: ArchConfig) -> Model:
                 p, batch["tokens"], cfg, max_len=max_len,
                 vision_embeds=batch.get("vision_embeds")),
             decode_step=lambda p, st, t, pos: lm.lm_decode_step(p, st, t, pos, cfg),
-            init_decode_state=lambda b, s: lm.init_decode_state(
+            init_decode_state=lambda b, s, **kw: lm.init_decode_state(
                 cfg, b, s, jnp.dtype(cfg.dtype)),
+            state_batch_axes=lm.state_batch_axes,
         )
     if fam == "hybrid":
         def fwd(params, batch, remat):
@@ -118,8 +150,9 @@ def build_model(cfg: ArchConfig) -> Model:
                 p, batch["tokens"], cfg, max_len=max_len),
             decode_step=lambda p, st, t, pos: zamba.zamba_decode_step(
                 p, st, t, pos, cfg),
-            init_decode_state=lambda b, s: zamba.init_zamba_state(
+            init_decode_state=lambda b, s, **kw: zamba.init_zamba_state(
                 cfg, b, s, jnp.dtype(cfg.dtype)),
+            state_batch_axes=zamba.state_batch_axes,
         )
     if fam == "ssm":
         def fwd(params, batch, remat):
@@ -132,8 +165,9 @@ def build_model(cfg: ArchConfig) -> Model:
             prefill=lambda p, batch, max_len: rwkv_prefill(p, batch, cfg),
             decode_step=lambda p, st, t, pos: rwkv_lm.rwkv_decode_step(
                 p, st, t, pos, cfg),
-            init_decode_state=lambda b, s: rwkv_lm.init_rwkv_state(
+            init_decode_state=lambda b, s, **kw: rwkv_lm.init_rwkv_state(
                 cfg, b, jnp.dtype(cfg.dtype)),
+            state_batch_axes=rwkv_lm.state_batch_axes,
         )
     if fam == "audio":
         def fwd(params, batch, remat):
@@ -150,8 +184,13 @@ def build_model(cfg: ArchConfig) -> Model:
                 max_len=max_len),
             decode_step=lambda p, st, t, pos: encdec.encdec_decode_step(
                 p, st, t, pos, cfg),
-            init_decode_state=lambda b, s: encdec.init_encdec_state(
-                cfg, b, s, enc_len=s, dtype=jnp.dtype(cfg.dtype)),
+            # enc_len: serve engines size the per-request cross-state by the
+            # (fixed) encoder length, not max_len (dry-run default keeps s)
+            init_decode_state=lambda b, s, enc_len=None, **kw:
+                encdec.init_encdec_state(
+                    cfg, b, s, enc_len=s if enc_len is None else enc_len,
+                    dtype=jnp.dtype(cfg.dtype)),
+            state_batch_axes=encdec.state_batch_axes,
         )
     raise ValueError(f"unknown family {fam!r}")
 

@@ -96,6 +96,12 @@ def init_rwkv_state(cfg, batch: int, dtype):
     }
 
 
+def state_batch_axes(state):
+    """Slot-axis position per state leaf (serve-layer state surgery): every
+    recurrent leaf is (L, B, ...) — the request axis sits at 1."""
+    return {k: 1 for k in state}
+
+
 def rwkv_decode_step(params, state, tokens_t, pos, cfg):
     x = tsl.embed_lookup(params["embed"], tokens_t)
     x = apply_norm_params(cfg, params["ln_in"], x)

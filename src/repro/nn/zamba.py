@@ -140,6 +140,14 @@ def init_zamba_state(cfg, batch: int, max_len: int, dtype):
     return state
 
 
+def state_batch_axes(state):
+    """Slot-axis position per state leaf (serve-layer state surgery): the
+    grouped SSM/conv leaves are (G, k, B, ...) — request axis at 2; the
+    shared-attn caches (G, B, KH, S, hd) and the remainder stack
+    (rem, B, ...) carry it at 1."""
+    return {k: 2 if k in ("h", "conv") else 1 for k in state}
+
+
 def zamba_decode_step(params, state, tokens_t, pos, cfg):
     x = tsl.embed_lookup(params["embed"], tokens_t)
 

@@ -1,0 +1,27 @@
+"""Continuous-batching serving subsystem.
+
+- ``scheduler``: request queue, slot-table lifecycle, SLA accounting,
+  ``lib.cost()``-driven admission (host-side control plane, no jax);
+- ``slots``: slot-level state access — read a slot back out, validate a
+  donor against the slot table (the insert/reset surgery itself lives on
+  ``Model.insert_slot``/``reset_slot``, uniform over all four families);
+- ``engine``: the per-step continuous-batching loop (jit-stable shapes,
+  per-slot positions, TTFT / decode-t/s / SLA metrics).
+
+See README.md in this directory for the slot/state-surgery contract.
+"""
+
+from .engine import SamplingConfig, ServeEngine
+from .scheduler import CostModelAdmission, Request, RequestMetrics, Scheduler
+from .slots import take_slot, validate_donor
+
+__all__ = [
+    "CostModelAdmission",
+    "Request",
+    "RequestMetrics",
+    "SamplingConfig",
+    "Scheduler",
+    "ServeEngine",
+    "take_slot",
+    "validate_donor",
+]

@@ -1,0 +1,237 @@
+"""Per-step continuous-batching serving engine.
+
+One fixed-shape batched decode state (the slot table) runs one jitted decode
+step per iteration; ANY slot that frees is refilled from the request queue
+BEFORE the next step — a finished sequence never idles its slot while
+neighbours drain (the wave-loop failure mode this engine replaces). All
+device-side shapes are static — (B, 1) tokens, (B,) per-slot positions, the
+state pytree — so the decode step compiles exactly once per engine, and
+admission is state surgery (``Model.insert_slot``), not reshaping.
+
+Prefill runs per request at its natural prompt length (one compile per
+distinct length — callers who care bucket their prompt lengths), then the
+prefilled single-request state is grafted into the freed slot.
+
+Metrics per request: TTFT, decode tokens/s, end-to-end latency, SLA hit;
+per engine run: real-token throughput (padded/idle slots never counted),
+steady-state padded-slot steps (0 == true continuous batching), slot-reuse
+counts, the admission log, and every refusal with its cost-model reason.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import asdict, dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.model import build_model
+
+from .scheduler import CostModelAdmission, Request, Scheduler
+from .slots import validate_donor
+
+
+@dataclass(frozen=True)
+class SamplingConfig:
+    """temperature <= 0 -> greedy argmax; top_k 0 -> no truncation."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg, *, batch: int, max_len: int,
+                 sampling: SamplingConfig | None = None, seed: int = 0,
+                 enc_len: int | None = None, admission: bool = True):
+        if cfg.family == "audio" and enc_len is None:
+            raise ValueError("audio family: pass enc_len (the fixed encoder "
+                             "length every request's frames are sized to)")
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.enc_len = enc_len
+        self.sampling = sampling or SamplingConfig()
+        self.model = build_model(cfg)
+        self.params = self.model.init(jax.random.PRNGKey(seed))
+        # the donor cache is filled to prompt_len + decode_prefix (vlm vision
+        # rows), and decode must write AFTER it
+        self._prefix = cfg.decode_prefix
+        self.cost_model = CostModelAdmission(cfg, batch, max_len,
+                                             enc_len=enc_len) \
+            if admission else None
+        self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
+        # donate the incoming state: it is dead after every call, and without
+        # donation each step/insert/reset copies the full multi-layer cache
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._insert = jax.jit(self.model.insert_slot, donate_argnums=(0,))
+        self._reset = jax.jit(self.model.reset_slot, donate_argnums=(0,))
+        self._sample = self._build_sampler()
+        self._key = jax.random.PRNGKey(seed + 1)
+
+    # -- helpers --------------------------------------------------------------
+
+    def _build_sampler(self):
+        temp, top_k = self.sampling.temperature, self.sampling.top_k
+        vocab = self.cfg.vocab
+
+        def mask_padding(logits):
+            # the lm head is padded_vocab wide: never emit a padding id
+            keep = jnp.arange(logits.shape[-1]) < vocab
+            return jnp.where(keep, logits, jnp.full_like(logits, -1e30))
+
+        if temp <= 0.0:
+            def sample(logits, key):
+                return jnp.argmax(mask_padding(logits), axis=-1)
+        else:
+            def sample(logits, key):
+                scaled = mask_padding(logits).astype(jnp.float32) / temp
+                if top_k:
+                    kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+                    scaled = jnp.where(scaled < kth, jnp.float32(-1e30), scaled)
+                return jax.random.categorical(key, scaled, axis=-1)
+
+        return jax.jit(sample)
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def _make_batch(self, prompts: np.ndarray, embeds=None) -> dict:
+        cfg = self.cfg
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if cfg.family == "vlm":
+            batch["vision_embeds"] = (
+                jnp.asarray(embeds, cfg.dtype)[None] if embeds is not None
+                else jnp.zeros((len(prompts), cfg.vision_prefix, cfg.d_model),
+                               cfg.dtype))
+        if cfg.family == "audio":
+            batch["audio_embeds"] = (
+                jnp.asarray(embeds, cfg.dtype)[None] if embeds is not None
+                else jnp.zeros((len(prompts), self.enc_len, cfg.d_model),
+                               cfg.dtype))
+        return batch
+
+    def _init_state(self):
+        return self.model.init_decode_state(self.batch, self.max_len,
+                                            enc_len=self.enc_len)
+
+    # -- the serving loop -----------------------------------------------------
+
+    def run(self, requests: list[Request]) -> dict:
+        rids = [r.rid for r in requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("duplicate request rids (outputs and metrics "
+                             "are keyed by rid)")
+        bad = [r.rid for r in requests if r.gen_len < 1]
+        if bad:
+            raise ValueError(f"gen_len must be >= 1 (requests {bad}); the "
+                             "first token always comes from prefill")
+        sched = Scheduler(self.batch, admission=self.cost_model)
+        t0 = time.perf_counter()
+        now = lambda: time.perf_counter() - t0  # noqa: E731
+        for r in requests:
+            sched.submit(r, now())
+
+        state = self._init_state()
+        tokens = jnp.zeros((self.batch, 1), jnp.int32)
+        pos_host = np.zeros(self.batch, np.int64)
+        outputs: dict[str, list[int]] = {}
+        step = 0
+        padded_steady = 0
+        generated = 0
+
+        while sched.has_work():
+            # admission phase: refill EVERY free slot before the next step —
+            # re-reading free_slots() each pass, since a gen_len==1 request
+            # completes AT admission and frees its slot for the next in line
+            while True:
+                free = sched.free_slots()
+                if not free:
+                    break
+                req = sched.next_admissible(now())
+                if req is None:
+                    break
+                slot = free[0]
+                prompt = np.asarray(req.tokens, np.int64)[None, :]
+                logits1, donor = self._prefill(
+                    self.params, self._make_batch(prompt, req.embeds),
+                    self.max_len)
+                validate_donor(state, donor,
+                               self.model.state_batch_axes(state))
+                state = self._insert(state, donor, slot)
+                first = int(np.asarray(
+                    self._sample(logits1, self._next_key()))[0])
+                sched.place(req, slot, step)
+                sched.first_token(slot, now())
+                generated += 1
+                outputs[req.rid] = [first]
+                tokens = tokens.at[slot, 0].set(first)
+                pos_host[slot] = req.prompt_len + self._prefix
+                if sched.slot_done(slot):        # gen_len == 1 edge case
+                    sched.finish(slot, now())
+                    state = self._reset(state, slot)
+
+            active = sched.active_slots()
+            if not active:
+                # nothing decoding (e.g. every admitted request finished at
+                # admission with gen_len == 1) — but the queue may still hold
+                # work, so loop back to admission rather than exiting
+                continue
+            if sched.queue:
+                # queue still has work: every free slot this step is waste.
+                # With per-step admission this is 0 by construction — the
+                # counter is a tripwire so any future scheduling policy that
+                # delays admission (waves, arrival times, deferred refusals)
+                # surfaces its cost here instead of silently regressing
+                padded_steady += self.batch - len(active)
+
+            if int(pos_host[active].max()) >= self.max_len:
+                # reachable only with admission=False (admission's
+                # over_budget check forbids it): fail loudly rather than
+                # silently clobbering the last cache row
+                raise RuntimeError(
+                    f"active slot position {int(pos_host[active].max())} "
+                    f"overran max_len={self.max_len}")
+            pos_vec = jnp.asarray(pos_host, jnp.int32)
+            logits, state = self._decode(self.params, state, tokens, pos_vec)
+            toks = np.asarray(self._sample(logits, self._next_key()))
+            tokens = jnp.asarray(toks[:, None], jnp.int32)
+            for slot in active:
+                rid = sched.slots[slot].request.rid
+                sched.step_done(slot)
+                pos_host[slot] += 1
+                outputs[rid].append(int(toks[slot]))
+                generated += 1
+                if sched.slot_done(slot):
+                    sched.finish(slot, now())
+                    state = self._reset(state, slot)
+            step += 1
+
+        wall = max(now(), 1e-9)
+        finished = sched.finished
+        ttfts = [m.ttft_s for m in finished]
+        report = {
+            "arch": self.cfg.name,
+            "requests": len(finished),
+            "generated_tokens": generated,
+            "decode_tokens_per_s": generated / wall,
+            "steps": step,
+            "wall_s": wall,
+            "padded_slot_steps_steady": padded_steady,
+            "ttft_s_mean": float(np.mean(ttfts)) if ttfts else 0.0,
+            "sla_hit_rate": sched.sla_hit_rate(),
+            "slot_reuse": sched.slot_reuse(),
+            "admission_log": sched.admission_log,
+            "per_request": [asdict(m) for m in finished],
+            "refused": [{"rid": r.rid, "reason": r.reason}
+                        for r in sched.refused],
+            "outputs": outputs,
+        }
+        if self.cost_model is not None:
+            report["cost_model"] = {
+                "decode_bytes_per_step": self.cost_model.decode_bytes_per_step(),
+                "step_seconds": self.cost_model.step_seconds(),
+            }
+        return report

@@ -1,0 +1,287 @@
+"""Slot-table scheduler for per-step continuous batching.
+
+Pure host-side control plane — no jax in here. The engine owns the device
+state; the scheduler owns the request queue, the per-slot lifecycle
+(free -> occupied -> free), per-request SLA/deadline accounting, and the
+admission decision. Admission is roofline-informed: the cost model consumes
+the SAME analytic ``lib.cost()`` terms the generator selected the primitive
+implementations with (PAPER.md §cost channel), so "can this request meet its
+deadline on this hardware at this batch size" is answered from the UPD cost
+formulas + the v5e roofline constants, not from guesswork.
+
+Refusals are permanent and carry a reason (``over_budget`` — the request
+does not fit the slot table's max_len; ``sla_infeasible`` — even the
+best-case estimate misses its deadline), so callers can re-shape and resubmit
+rather than letting a doomed request occupy a slot.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass
+
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+
+@dataclass
+class Request:
+    """One serving request: a prompt, a generation budget, an optional SLA.
+
+    ``sla_s`` is an end-to-end latency deadline in seconds, measured from
+    ``submit`` — both admission (projection) and the final hit/miss
+    accounting are against it.
+    """
+
+    rid: str
+    tokens: object                  # prompt token array (1-D, int)
+    gen_len: int
+    sla_s: float | None = None
+    embeds: object | None = None    # per-request media: vlm (prefix, D)
+                                    # vision / audio (enc_len, D) frames
+    arrival_s: float = 0.0          # stamped by Scheduler.submit
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.tokens))
+
+
+@dataclass
+class RequestMetrics:
+    """Per-request accounting the engine reports (and tests assert on)."""
+
+    rid: str
+    slot: int = -1
+    prompt_len: int = 0
+    gen_len: int = 0
+    tokens_out: int = 0
+    ttft_s: float = 0.0             # arrival -> first token (prefill + queue)
+    decode_tokens_per_s: float = 0.0
+    latency_s: float = 0.0          # arrival -> last token
+    sla_s: float | None = None
+    sla_met: bool | None = None     # None: no SLA attached
+    admitted_at_step: int = -1      # engine decode-step index at admission
+
+
+@dataclass
+class Refusal:
+    rid: str
+    reason: str
+
+
+class CostModelAdmission:
+    """Roofline admission driven by the generated library's cost channel.
+
+    A decode step over the full slot table is modeled as memory-bound:
+      bytes/step = param bytes (weights stream once per token)
+                 + n_attn_layers x lib.cost("attention_decode", "bytes", ...)
+      step_s     = bytes / HBM_BW
+    Prefill is modeled as compute-bound: 2·N·prompt_len / PEAK_FLOPS.
+
+    Both are deliberately idealized (roofline = best case); a request whose
+    deadline fails even the BEST case is hopeless, which makes refusal sound.
+    ``lib.cost`` raising KeyError (a generated package without the term) falls
+    back to the same formula evaluated analytically, so admission never takes
+    the serving path down with it.
+    """
+
+    def __init__(self, cfg, batch: int, max_len: int,
+                 enc_len: int | None = None):
+        self.cfg = cfg
+        self.batch = batch
+        self.max_len = max_len
+        self.enc_len = enc_len          # audio: fixed cross K/V length
+        self.prefix = cfg.decode_prefix
+        self.param_bytes = cfg.param_count(
+            active_only=(cfg.family == "moe")) * self._dtype_bytes()
+        self._attn_layers = self._n_attn_layers()
+        self._step_s = None         # computed lazily, cached (pure shapes)
+
+    def _dtype_bytes(self) -> int:
+        return 2 if "16" in self.cfg.dtype else 4
+
+    def _n_attn_layers(self) -> int:
+        fam = self.cfg.family
+        if fam == "ssm":
+            return 0
+        if fam == "hybrid":
+            return self.cfg.n_layers // max(self.cfg.attn_every, 1)
+        if fam == "audio":
+            return 2 * self.cfg.n_layers    # decoder self + cross attention
+        return self.cfg.n_layers
+
+    def decode_bytes_per_step(self, s: int | None = None) -> float:
+        """Bytes one full-slot-table decode step moves (UPD cost channel).
+
+        ``s`` is the cache fill to charge attention reads at; defaults to
+        the slot table's max_len (steady-state worst case, reported to
+        operators). Admission charges each request at ITS OWN maximal fill
+        so a short request in a large slot table is not over-billed."""
+        cfg = self.cfg
+        s_eff = self.max_len if s is None else s
+
+        def per_layer(s_: int) -> float:
+            shapes = dict(B=self.batch, H=cfg.n_heads, KH=cfg.n_kv_heads,
+                          S=s_, D=cfg.hd)
+            try:
+                from repro.tsl_api import cost
+                raw = cost("attention_decode", "bytes", **shapes)
+            except KeyError:
+                # same formula as the UPD term, evaluated analytically
+                raw = 2.0 * shapes["B"] * (
+                    2 * shapes["KH"] * shapes["S"] + 2 * shapes["H"]
+                ) * shapes["D"]
+            # UPD bytes formulas follow the bf16 production convention
+            # (2 B/elem); rescale so this term and param_bytes use the SAME
+            # element size when the serving dtype differs (reduced = f32)
+            return raw * (self._dtype_bytes() / 2.0)
+
+        attn = 0.0
+        if self._attn_layers:
+            if cfg.family == "audio":
+                # decoder self-attn reads the rolling cache; cross-attn reads
+                # the FIXED enc_len-sized K/V, not max_len
+                enc = self.enc_len if self.enc_len is not None else s_eff
+                attn = cfg.n_layers * (per_layer(s_eff) + per_layer(enc))
+            else:
+                attn = self._attn_layers * per_layer(s_eff)
+        return self.param_bytes + attn
+
+    def step_seconds(self, s: int | None = None) -> float:
+        if s is not None:
+            return self.decode_bytes_per_step(s) / HBM_BW
+        if self._step_s is None:
+            self._step_s = self.decode_bytes_per_step() / HBM_BW
+        return self._step_s
+
+    def prefill_seconds(self, prompt_len: int) -> float:
+        n = self.cfg.param_count(active_only=(self.cfg.family == "moe"))
+        return 2.0 * n * prompt_len / PEAK_FLOPS
+
+    def admit(self, req: Request, now_s: float) -> tuple[bool, str]:
+        if self.prefix + req.prompt_len + req.gen_len > self.max_len:
+            return False, (f"over_budget: prompt {req.prompt_len} + gen "
+                           f"{req.gen_len}"
+                           + (f" + vision prefix {self.prefix}"
+                              if self.prefix else "")
+                           + f" > max_len {self.max_len}")
+        if req.sla_s is not None:
+            waited = max(0.0, now_s - req.arrival_s)
+            # charge attention reads at THIS request's maximal cache fill,
+            # not max_len: a short request in a large slot table must not be
+            # refused on traffic it will never generate
+            s_req = self.prefix + req.prompt_len + req.gen_len
+            projected = (waited + self.prefill_seconds(req.prompt_len)
+                         + req.gen_len * self.step_seconds(s_req))
+            if projected > req.sla_s:
+                return False, (f"sla_infeasible: projected {projected:.3e}s "
+                               f"> sla {req.sla_s:.3e}s")
+        return True, "ok"
+
+
+@dataclass
+class _Slot:
+    request: Request | None = None
+    metrics: RequestMetrics | None = None
+    served: int = 0                 # lifetime requests this slot carried
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class Scheduler:
+    """Request queue + slot table + SLA accounting.
+
+    Protocol (driven by the engine once per decode step):
+      submit(req, now)                 — enqueue (stamps arrival)
+      next_admissible(now)             — pop the next request that passes
+                                         admission; refused requests are
+                                         recorded and dropped
+      place(req, slot, step)           — occupy a slot (prefill done)
+      first_token(slot, now)           — TTFT stamp
+      step_done(slot)                  — one real token decoded in this slot
+      finish(slot, now) -> metrics     — request complete, slot freed
+    """
+
+    def __init__(self, n_slots: int, admission: CostModelAdmission | None = None):
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: deque[Request] = deque()
+        self.admission = admission
+        self.finished: list[RequestMetrics] = []
+        self.refused: list[Refusal] = []
+        self.admission_log: list[dict] = []   # {step, slot, rid} per admission
+
+    # -- queue ----------------------------------------------------------------
+
+    def submit(self, req: Request, now_s: float) -> None:
+        req.arrival_s = now_s
+        self.queue.append(req)
+
+    def next_admissible(self, now_s: float) -> Request | None:
+        while self.queue:
+            req = self.queue.popleft()
+            if self.admission is None:
+                return req
+            ok, reason = self.admission.admit(req, now_s)
+            if ok:
+                return req
+            self.refused.append(Refusal(req.rid, reason))
+        return None
+
+    # -- slot lifecycle -------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.free]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if not s.free]
+
+    def place(self, req: Request, slot: int, step: int) -> None:
+        s = self.slots[slot]
+        if not s.free:
+            raise ValueError(
+                f"slot {slot} is occupied by {s.request.rid!r}")
+        s.request = req
+        s.served += 1
+        s.metrics = RequestMetrics(
+            rid=req.rid, slot=slot, prompt_len=req.prompt_len,
+            gen_len=req.gen_len, sla_s=req.sla_s, admitted_at_step=step)
+        self.admission_log.append({"step": step, "slot": slot, "rid": req.rid})
+
+    def first_token(self, slot: int, now_s: float) -> None:
+        m = self.slots[slot].metrics
+        m.ttft_s = max(now_s - self.slots[slot].request.arrival_s, 1e-9)
+        m.tokens_out = 1
+
+    def step_done(self, slot: int) -> None:
+        self.slots[slot].metrics.tokens_out += 1
+
+    def slot_done(self, slot: int) -> bool:
+        s = self.slots[slot]
+        return (not s.free) and s.metrics.tokens_out >= s.request.gen_len
+
+    def finish(self, slot: int, now_s: float) -> RequestMetrics:
+        s = self.slots[slot]
+        m, req = s.metrics, s.request
+        m.latency_s = max(now_s - req.arrival_s, 1e-9)
+        decode_s = max(m.latency_s - m.ttft_s, 1e-9)
+        m.decode_tokens_per_s = max(m.tokens_out - 1, 0) / decode_s
+        if m.sla_s is not None:
+            m.sla_met = m.latency_s <= m.sla_s
+        s.request, s.metrics = None, None
+        self.finished.append(m)
+        return m
+
+    # -- aggregate view -------------------------------------------------------
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or bool(self.active_slots())
+
+    def sla_hit_rate(self) -> float | None:
+        scored = [m for m in self.finished if m.sla_met is not None]
+        if not scored:
+            return None
+        return sum(m.sla_met for m in scored) / len(scored)
+
+    def slot_reuse(self) -> list[int]:
+        return [s.served for s in self.slots]

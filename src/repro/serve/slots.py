@@ -1,0 +1,59 @@
+"""State surgery for continuous batching: slot-level access to a live
+batched decode state.
+
+Every decode family carries its state as a pytree of arrays with the request
+(slot) axis at a family-specific position per leaf — KV caches put it at
+axis 1 under the layer axis, zamba's grouped SSM states at axis 2 under the
+(group, layer-in-group) axes, rwkv recurrent states at axis 1, encdec
+cross-state at axis 1. The family module declares that knowledge once as a
+``state_batch_axes(state)`` pytree of ints (same treedef as the state), and
+the surgery itself lives on the ModelApi: ``Model.insert_slot`` writes a
+freshly prefilled single-request state (slot axis of size 1) into one slot,
+``Model.reset_slot`` zeroes a finished slot. Both are pure jnp
+(``dynamic_update_slice_in_dim`` with a traced slot index), so an engine can
+jit them once and admit into ANY slot without recompiling — the
+jit-stable-shape property per-step continuous batching depends on.
+
+This module provides the serving-side companions: reading a slot back out
+(``take_slot``) and host-side donor validation (``validate_donor``).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def take_slot(state, axes, slot: int):
+    """Read slot ``slot`` back out as a single-request state (host-side
+    inspection / tests). Keeps the slot axis with size 1, mirroring what
+    ``Model.insert_slot`` expects as a donor."""
+
+    def tk(leaf, ax):
+        return jax.lax.dynamic_slice_in_dim(leaf, slot, 1, axis=ax)
+
+    return jax.tree.map(tk, state, axes)
+
+
+def validate_donor(state, donor, axes) -> None:
+    """Raise ValueError unless ``donor`` is shape-compatible with one slot of
+    ``state``: identical leaves except the slot axis, which must be 1.
+
+    Catches the classic continuous-batching foot-guns before they become an
+    XLA shape error deep in a jitted insert — e.g. a prefill that padded its
+    KV cache to a different max_len than the engine's slot table, or an
+    encdec donor whose encoder length differs from the engine's.
+    """
+    s_leaves, s_def = jax.tree.flatten(state)
+    d_leaves, d_def = jax.tree.flatten(donor)
+    a_leaves, _ = jax.tree.flatten(axes)
+    if s_def != d_def:
+        raise ValueError(
+            f"donor state tree does not match batched state tree: "
+            f"{d_def} vs {s_def}")
+    for s, d, ax in zip(s_leaves, d_leaves, a_leaves):
+        want = list(s.shape)
+        want[ax] = 1
+        if list(d.shape) != want:
+            raise ValueError(
+                f"donor leaf {d.shape} incompatible with batched leaf "
+                f"{s.shape} (slot axis {ax}; expected {tuple(want)})")

@@ -1,13 +1,327 @@
-"""Serving-path regression: throughput accounting must count served requests,
-not padded wave slots (padding is compute overhead, not traffic)."""
+"""Serving-path tests: per-step continuous batching (slot reuse mid-stream,
+zero steady-state padded slots), the slot/state-surgery contract across all
+four decode families, cost-model admission, SLA/deadline accounting, and
+real-token-only throughput."""
 
+import numpy as np
+import pytest
+
+from repro.configs import get_config
 from repro.launch.serve import main
+from repro.serve import (CostModelAdmission, Request, SamplingConfig,
+                         Scheduler, ServeEngine, take_slot, validate_donor)
 
 
-def test_serve_counts_only_real_requests():
-    # 5 requests with batch 4 -> second wave is 1 real + 3 padded slots
+def _requests(cfg, gen_lens, prompt_len=8, seed=0, sla_s=None):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=f"r{i}",
+                tokens=rng.integers(0, cfg.vocab, prompt_len).astype(np.int32),
+                gen_len=g, sla_s=sla_s)
+        for i, g in enumerate(gen_lens)
+    ]
+
+
+# -- scheduler control plane (no models, no jax) -------------------------------
+
+
+def test_scheduler_slot_lifecycle_and_sla_accounting():
+    sched = Scheduler(2)
+    a = Request(rid="a", tokens=np.arange(4), gen_len=3, sla_s=10.0)
+    b = Request(rid="b", tokens=np.arange(4), gen_len=2, sla_s=0.5)
+    sched.submit(a, 0.0)
+    sched.submit(b, 0.0)
+    assert sched.free_slots() == [0, 1]
+
+    req = sched.next_admissible(0.0)
+    sched.place(req, 0, step=0)
+    sched.first_token(0, 1.0)                  # TTFT = 1s
+    assert sched.free_slots() == [1]
+    sched.step_done(0)
+    sched.step_done(0)                         # 3 tokens total -> done
+    assert sched.slot_done(0)
+    m = sched.finish(0, 3.0)
+    assert m.rid == "a" and m.ttft_s == pytest.approx(1.0)
+    assert m.latency_s == pytest.approx(3.0) and m.sla_met is True
+    assert m.decode_tokens_per_s == pytest.approx(2 / 2.0)
+    assert sched.free_slots() == [0, 1]        # slot freed for reuse
+
+    req = sched.next_admissible(0.0)
+    sched.place(req, 0, step=5)
+    sched.first_token(0, 0.2)
+    sched.step_done(0)
+    m = sched.finish(0, 1.0)                   # 1.0s > sla 0.5s -> miss
+    assert m.sla_met is False
+    assert sched.sla_hit_rate() == pytest.approx(0.5)
+    assert sched.slot_reuse() == [2, 0]
+    assert [e["rid"] for e in sched.admission_log] == ["a", "b"]
+
+
+def test_cost_model_admission_refuses_over_budget_and_infeasible():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    adm = CostModelAdmission(cfg, batch=2, max_len=32)
+    # roofline terms are real numbers fed by lib.cost()
+    assert adm.decode_bytes_per_step() > adm.param_bytes > 0
+    assert adm.step_seconds() > 0
+
+    fits = Request(rid="ok", tokens=np.arange(8), gen_len=8, sla_s=60.0)
+    assert adm.admit(fits, 0.0) == (True, "ok")
+    over = Request(rid="big", tokens=np.arange(30), gen_len=8)
+    ok, reason = adm.admit(over, 0.0)
+    assert not ok and reason.startswith("over_budget")
+    doomed = Request(rid="tight", tokens=np.arange(8), gen_len=8, sla_s=1e-12)
+    ok, reason = adm.admit(doomed, 0.0)
+    assert not ok and reason.startswith("sla_infeasible")
+
+    # the scheduler records refusals and keeps serving admissible work
+    sched = Scheduler(2, admission=adm)
+    sched.submit(over, 0.0)
+    sched.submit(fits, 0.0)
+    got = sched.next_admissible(0.0)
+    assert got.rid == "ok"
+    assert [r.rid for r in sched.refused] == ["big"]
+    assert "over_budget" in sched.refused[0].reason
+
+
+# -- per-step continuous batching through the engine ---------------------------
+
+
+@pytest.mark.parametrize("arch,enc_len", [("qwen1.5-0.5b", None),
+                                          ("rwkv6-7b", None),
+                                          ("zamba2-7b", None),
+                                          ("whisper-tiny", 8)])
+def test_engine_admits_into_freed_slot_mid_stream(arch, enc_len):
+    """batch=2, requests=4, staggered gen lengths: a freed slot must be
+    refilled BEFORE the long-running neighbour finishes, across all four
+    decode-state families (KV cache, recurrent, hybrid, encdec)."""
+    import jax
+
+    jax.clear_caches()
+    cfg = get_config(arch).reduced()
+    eng = ServeEngine(cfg, batch=2, max_len=24, enc_len=enc_len)
+    gen_lens = [4, 12, 6, 12]
+    rep = eng.run(_requests(cfg, gen_lens, sla_s=600.0))
+
+    assert rep["requests"] == 4
+    # throughput counts only real tokens (idle slots are never traffic)
+    assert rep["generated_tokens"] == sum(gen_lens)
+    assert rep["decode_tokens_per_s"] > 0
+    # per-request metrics: TTFT, decode t/s, SLA
+    assert all(m["ttft_s"] > 0 for m in rep["per_request"])
+    assert all(m["decode_tokens_per_s"] > 0 for m in rep["per_request"])
+    assert rep["sla_hit_rate"] == 1.0
+    # steady state ran with zero padded slots
+    assert rep["padded_slot_steps_steady"] == 0
+    # slot reuse: some slot served more than one request
+    assert max(rep["slot_reuse"]) >= 2
+    # r2 entered a freed slot strictly mid-stream: after step 0, before the
+    # long request admitted at step 0 (gen 12) could possibly have finished
+    steps_by_rid = {e["rid"]: e["step"] for e in rep["admission_log"]}
+    assert 0 < steps_by_rid["r2"] < 12 - 1, steps_by_rid
+
+
+def test_engine_refuses_and_still_serves_the_rest():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    eng = ServeEngine(cfg, batch=2, max_len=16)
+    good = _requests(cfg, [3, 3], prompt_len=6)
+    bad = [Request(rid="big", tokens=np.zeros(14, np.int32), gen_len=8),
+           Request(rid="doomed", tokens=np.zeros(6, np.int32), gen_len=3,
+                   sla_s=1e-12)]
+    rep = eng.run(good + bad)
+    assert rep["requests"] == 2
+    reasons = {r["rid"]: r["reason"] for r in rep["refused"]}
+    assert reasons["big"].startswith("over_budget")
+    assert reasons["doomed"].startswith("sla_infeasible")
+    assert rep["generated_tokens"] == 6
+
+
+def test_engine_gen_len_one_does_not_strand_the_queue():
+    """Requests finishing AT admission (gen_len=1) free their slots with no
+    active decode; the loop must re-enter admission, not exit early."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    eng = ServeEngine(cfg, batch=2, max_len=12)
+    rep = eng.run(_requests(cfg, [1, 1, 1], prompt_len=4))
+    assert rep["requests"] == 3
+    assert rep["generated_tokens"] == 3
+
+    # a slot freed DURING the admission phase is refilled in the same phase:
+    # no padded decode step while the queue still has work
+    rep = eng.run(_requests(cfg, [1, 6, 2], prompt_len=4))
+    assert rep["requests"] == 3
+    assert rep["padded_slot_steps_steady"] == 0
+
+
+def test_engine_vlm_accounts_vision_prefix():
+    """VLM prefill prepends vision_prefix cache rows: decode must write after
+    them (not clobber them), and admission must budget for them."""
+    cfg = get_config("internvl2-2b").reduced()
+    assert cfg.vision_prefix > 0
+    max_len = cfg.vision_prefix + 6 + 4
+    eng = ServeEngine(cfg, batch=2, max_len=max_len)
+    reqs = _requests(cfg, [3, 4, 3], prompt_len=6)
+    # per-request media rides along (others fall back to zero embeddings)
+    reqs[0].embeds = np.ones((cfg.vision_prefix, cfg.d_model), np.float32)
+    rep = eng.run(reqs)
+    assert rep["requests"] == 3
+    assert rep["generated_tokens"] == 10
+    # prompt alone fits max_len, but prompt + vision prefix + gen does not
+    adm = CostModelAdmission(cfg, batch=2, max_len=max_len)
+    tight = Request(rid="t", tokens=np.zeros(7, np.int32), gen_len=4)
+    ok, reason = adm.admit(tight, 0.0)
+    assert not ok and "vision prefix" in reason
+
+
+def test_engine_rejects_duplicate_rids_and_empty_gen():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    eng = ServeEngine(cfg, batch=2, max_len=12)
+    dup = [Request(rid="same", tokens=np.zeros(4, np.int32), gen_len=2),
+           Request(rid="same", tokens=np.zeros(4, np.int32), gen_len=2)]
+    with pytest.raises(ValueError, match="duplicate request rids"):
+        eng.run(dup)
+    with pytest.raises(ValueError, match="gen_len"):
+        eng.run([Request(rid="z", tokens=np.zeros(4, np.int32), gen_len=0)])
+
+
+def test_engine_sampling_temperature_top_k():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    eng = ServeEngine(cfg, batch=2, max_len=16,
+                      sampling=SamplingConfig(temperature=0.8, top_k=16),
+                      seed=3)
+    rep = eng.run(_requests(cfg, [4, 4, 4], prompt_len=6))
+    assert rep["requests"] == 3
+    toks = [t for out in rep["outputs"].values() for t in out]
+    assert len(toks) == 12
+    # sampler masks the padded-vocab columns: only REAL token ids come out
+    assert all(0 <= t < cfg.vocab for t in toks)
+
+
+def test_per_slot_decode_matches_solo_reference():
+    """The continuous-batching path (vector pos: per-slot RoPE, vmapped cache
+    scatter, (B,) kv_len mask) must reproduce a solo scalar-pos generation
+    token for token — for a request admitted MID-STREAM into a slot whose
+    neighbour sits at a different position."""
+    import jax
+    import jax.numpy as jnp
+
+    jax.clear_caches()
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    from repro.nn.model import build_model
+
+    max_len, gen = 24, 6
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))   # same seed as the engine
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, 8).astype(np.int32)
+               for _ in range(3)]
+    target = prompts[2]
+
+    def greedy(logits):
+        masked = np.asarray(logits, np.float64)[..., :cfg.vocab]
+        return int(masked.argmax(-1)[0])
+
+    # solo reference: scalar-pos decode, batch 1
+    logits, st = model.prefill(
+        params, {"tokens": jnp.asarray(target[None])}, max_len)
+    want = [greedy(logits)]
+    pos = len(target)
+    for _ in range(gen - 1):
+        tok = jnp.asarray([[want[-1]]], jnp.int32)
+        logits, st = model.decode_step(params, st, tok, jnp.int32(pos))
+        want.append(greedy(logits))
+        pos += 1
+
+    # engine: the target request rides a freed slot mid-stream (slot 0 frees
+    # at step 3 while slot 1 is still at its own, different position)
+    eng = ServeEngine(cfg, batch=2, max_len=max_len, seed=0)
+    reqs = [Request(rid="filler0", tokens=prompts[0], gen_len=4),
+            Request(rid="filler1", tokens=prompts[1], gen_len=12),
+            Request(rid="target", tokens=target, gen_len=gen)]
+    rep = eng.run(reqs)
+    steps_by_rid = {e["rid"]: e["step"] for e in rep["admission_log"]}
+    assert steps_by_rid["target"] > 0          # genuinely mid-stream
+    assert rep["outputs"]["target"] == want
+
+
+# -- slot surgery across all four decode families ------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "zamba2-7b", "rwkv6-7b",
+                                  "whisper-tiny"])
+def test_slot_surgery_insert_take_reset(arch):
+    """insert_slot grafts a batch-1 prefilled state into one slot without
+    touching neighbours; reset_slot zeroes exactly that slot."""
+    import jax
+    import jax.numpy as jnp
+
+    jax.clear_caches()
+    cfg = get_config(arch).reduced()
+    from repro.nn.model import build_model
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_len, prompt_len = 12, 4
+    enc_len = 8 if cfg.family == "audio" else None
+    state = model.init_decode_state(2, max_len, enc_len=enc_len)
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab, (1, prompt_len)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["vision_embeds"] = jnp.zeros(
+            (1, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+    if cfg.family == "audio":
+        batch["audio_embeds"] = jnp.ones((1, enc_len, cfg.d_model), cfg.dtype)
+    _, donor = model.prefill(params, batch, max_len)
+
+    axes = model.state_batch_axes(state)
+    validate_donor(state, donor, axes)
+    st1 = model.insert_slot(state, donor, 1)
+    for got, want in zip(jax.tree.leaves(take_slot(st1, axes, 1)),
+                         jax.tree.leaves(donor)):
+        np.testing.assert_allclose(np.asarray(got, np.float64),
+                                   np.asarray(want, np.float64))
+    # neighbour slot untouched
+    for got, want in zip(jax.tree.leaves(take_slot(st1, axes, 0)),
+                         jax.tree.leaves(take_slot(state, axes, 0))):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # reset zeroes exactly the grafted slot
+    st2 = model.reset_slot(st1, 1)
+    assert all(np.abs(np.asarray(x)).max() == 0
+               for x in jax.tree.leaves(take_slot(st2, axes, 1)))
+
+
+def test_validate_donor_rejects_shape_mismatch():
+    import jax
+
+    jax.clear_caches()
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    from repro.nn.model import build_model
+
+    model = build_model(cfg)
+    state = model.init_decode_state(2, 16)
+    wrong = model.init_decode_state(1, 12)      # padded to the wrong max_len
+    with pytest.raises(ValueError, match="incompatible"):
+        validate_donor(state, wrong, model.state_batch_axes(state))
+
+
+# -- CLI facade ----------------------------------------------------------------
+
+
+def test_serve_cli_counts_only_real_requests():
+    # 5 requests with batch 4: the 5th rides a freed slot, and throughput
+    # counts served requests only (idle slots are compute, not traffic)
     result = main(["--arch", "qwen1.5-0.5b", "--reduced", "--batch", "4",
                    "--prompt-len", "8", "--gen-len", "4", "--requests", "5"])
-    assert result["requests"] == 5          # was 8 with padded-slot counting
+    assert result["requests"] == 5
     assert result["decode_tokens_per_s"] > 0
+    assert result["padded_slot_steps_steady"] == 0
+    assert result["refused"] == []
     assert len(result["sample_output"]) == 4
+
+
+def test_serve_cli_sampling_and_sla_flags():
+    result = main(["--arch", "qwen1.5-0.5b", "--reduced", "--batch", "2",
+                   "--prompt-len", "6", "--gen-len", "3", "--requests", "3",
+                   "--temperature", "0.9", "--top-k", "8",
+                   "--sla-ms", "600000"])
+    assert result["requests"] == 3
+    assert result["sla_hit_rate"] == 1.0
