@@ -69,6 +69,22 @@ def run() -> list[str]:
     emit("prim_attention_decode_direct", t_raw, "")
     out.append(f"attention_decode overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
 
+    # serving prefill path (ISSUE 5): one 64-token continuation chunk against
+    # a 512-row cache filled to 448 — the unified step's per-chunk unit
+    qc = jnp.asarray(rng.normal(size=(2, 8, 64, 64)), jnp.float32)
+    t_tsl = time_fn(
+        jax.jit(lambda a: lib.ops.attention_prefill_chunk(a, k, v, kv_len=448)),
+        qc, n_iter=30)
+    t_raw = time_fn(
+        jax.jit(lambda a: fa_ref.attention_chunked(a, k, v, causal=True,
+                                                   kv_len=448, block_k=256)),
+        qc, n_iter=30)
+    emit("prim_attention_prefill_chunk_tsl", t_tsl,
+         f"overhead={(t_tsl-t_raw)/t_raw*100:+.1f}% "
+         f"({2 * 64 / t_tsl:,.0f} prefill tok/s)")
+    emit("prim_attention_prefill_chunk_direct", t_raw, "")
+    out.append(f"attention_prefill_chunk overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
+
     a = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     b = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     t_tsl = time_fn(jax.jit(lambda x_: lib.ops.matmul(x_, b)), a)

@@ -1,10 +1,12 @@
 """Serving launcher: thin CLI over repro.serve.ServeEngine (per-step
-continuous batching — a freed slot is refilled before the next decode step,
-admission is cost-model gated, and sampling is configurable).
+continuous batching with chunked prefill — prompts are padded to
+UPD-declared length buckets, prefill advances one fixed-size chunk per
+unified step alongside decode, admission is cost-model gated, and sampling
+is configurable).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b --reduced \
         --batch 4 --prompt-len 32 --gen-len 32 --requests 8 \
-        --temperature 0.8 --top-k 40 --sla-ms 500
+        --temperature 0.8 --top-k 40 --sla-ms 500 --prefill-chunk 8
 """
 
 from __future__ import annotations
@@ -16,7 +18,7 @@ import jax
 import numpy as np
 
 from repro.configs import get_config
-from repro.serve import Request, SamplingConfig, ServeEngine
+from repro.serve import BucketPolicy, Request, SamplingConfig, ServeEngine
 
 
 def main(argv=None) -> dict:
@@ -36,6 +38,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--sla-ms", type=float, default=None,
                     help="per-request end-to-end deadline; feeds both "
                          "cost-model admission and the hit-rate report")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="prefill tokens per unified step (default: the "
+                         "UPD-declared serve chunk; declared buckets round "
+                         "up to whole chunks)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -45,14 +51,23 @@ def main(argv=None) -> dict:
     # function ids from a previous model cannot alias stale executables
     jax.clear_caches()
 
-    # budget the slot table for the decode prefix (vlm vision rows) or
-    # admission would refuse every request by construction
+    # budget the slot table for the decode prefix (vlm vision rows) AND the
+    # length bucket the prompt pads to, or admission would refuse every
+    # request by construction; a prompt beyond the largest declared bucket
+    # extends the bucket set (rounded to whole chunks) instead of refusing
+    policy = BucketPolicy.from_upd(chunk=args.prefill_chunk)
+    bucket = policy.assign(args.prompt_len)
+    buckets = None
+    if bucket is None:
+        bucket = BucketPolicy.round_up(args.prompt_len, policy.chunk)
+        buckets = policy.buckets + (bucket,)
     engine = ServeEngine(
         cfg, batch=args.batch,
-        max_len=cfg.decode_prefix + args.prompt_len + args.gen_len,
+        max_len=cfg.decode_prefix + bucket + args.gen_len,
         sampling=SamplingConfig(temperature=args.temperature,
                                 top_k=args.top_k),
         seed=args.seed,
+        prefill_chunk=args.prefill_chunk, buckets=buckets,
         enc_len=args.prompt_len if cfg.family == "audio" else None)
 
     rng = np.random.default_rng(args.seed)
@@ -74,6 +89,9 @@ def main(argv=None) -> dict:
         "ttft_s_mean": report["ttft_s_mean"],
         "sla_hit_rate": report["sla_hit_rate"],
         "padded_slot_steps_steady": report["padded_slot_steps_steady"],
+        "prefill_chunk": report["prefill_chunk"],
+        "buckets": report["buckets"],
+        "ttft_by_bucket": report["ttft_by_bucket"],
         "refused": report["refused"],
         "sample_output": first[:8],
     }

@@ -101,6 +101,42 @@ def project_kv(p, x, cfg):
             v.reshape(b, s, kh, hd).transpose(0, 2, 1, 3))
 
 
+def attention_prefill_chunk(p, x, k_cache, v_cache, pos, cfg):
+    """Continuation prefill of one chunk into an existing cache.
+
+    x: (B, C, D) chunk activations; caches (B, KH, S_max, hd) filled to
+    ``pos`` real rows. Writes the chunk's K/V at rows [pos, pos+C) and
+    attends the chunk queries against the whole cache through
+    ``tsl.attention_prefill_chunk`` (causal, ends-aligned at pos+C).
+
+    Rows the caller marks as padding (its ``n_real < C``) need no masking
+    here: a padded row i >= n_real sits at position pos+i, strictly AFTER
+    every real row, so the causal mask already hides its key from every real
+    query; its own output row is garbage the caller discards, and its cache
+    row lies beyond the real fill (pos+n_real) where the decode-path kv_len
+    mask hides it until the next chunk/decode step overwrites it.
+
+    ``pos`` may be traced (jit-stable over cache fill). Returns
+    (y (B,C,D), k_cache', v_cache')."""
+    b, c, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    pos = jnp.asarray(pos)
+    # same projection pipeline (bias/qk_norm/RoPE/TP sharding) as the
+    # full-sequence path — q/k/v come back heads-major (B,{H|KH},C,hd)
+    q, k, v = _project_qkv(p, x, cfg, pos + jnp.arange(c))
+    # contiguous C-row slab write at the chunk's base position (cache layout
+    # (B,KH,S,hd): tsl.cache_update writes along axis 1 -> swap S forward)
+    k_cache = jnp.swapaxes(
+        tsl.cache_update(jnp.swapaxes(k_cache, 1, 2),
+                         k.transpose(0, 2, 1, 3), pos), 1, 2)
+    v_cache = jnp.swapaxes(
+        tsl.cache_update(jnp.swapaxes(v_cache, 1, 2),
+                         v.transpose(0, 2, 1, 3), pos), 1, 2)
+    o = tsl.attention_prefill_chunk(q, k_cache, v_cache, kv_len=pos + c)
+    o = o.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
+    return tsl.matmul(o, p["wo"]), k_cache, v_cache
+
+
 def attention_decode(p, x_t, k_cache, v_cache, pos, cfg, *, rope: bool = True):
     """One-token decode. x_t: (B,1,D); caches (B,KH,S_max,hd); pos: scalar
     write index, or a (B,) vector of PER-SLOT write indices (continuous

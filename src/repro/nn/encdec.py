@@ -23,7 +23,8 @@ def _scan(f, init, xs, **kw):
 
 
 from .attention import (attention_decode, attention_forward,
-                        cross_attention_forward, init_attention, project_kv)
+                        attention_prefill_chunk, cross_attention_forward,
+                        init_attention, project_kv)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .mlp import init_mlp, mlp_forward
 
@@ -157,6 +158,42 @@ def encdec_prefill(params, tokens, cfg, *, audio_embeds, max_len: int):
         widths = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
         k, v = jnp.pad(k, widths), jnp.pad(v, widths)
     return logits[:, -1], {"k": k, "v": v, "cross_k": ck, "cross_v": cv}
+
+
+def encdec_prefill_chunk(params, state, tokens, pos, cfg, *, audio_embeds=None):
+    """Continuation prefill of one decoder chunk. On the FIRST chunk
+    (``audio_embeds`` given) the encoder runs once and the per-request cross
+    K/V are seeded into the state; later chunks reuse them. Self-attention
+    writes the chunk's K/V at rows [pos, pos+C). Returns (logits (B,C,V),
+    new state)."""
+    if audio_embeds is not None:
+        enc = encode(params, audio_embeds, cfg, remat=False)
+
+        def cross_kv(bp):
+            return project_kv(bp["cross_attn"], enc, cfg)
+
+        ck, cv = jax.lax.map(cross_kv, params["dec_blocks"])
+        state = {**state, "cross_k": ck.astype(state["cross_k"].dtype),
+                 "cross_v": cv.astype(state["cross_v"].dtype)}
+    x = tsl.embed_lookup(params["embed"], tokens)
+
+    def body(x_c, inp):
+        bp, kc, vc, ck, cv = inp
+        h, kc, vc = attention_prefill_chunk(
+            bp["self_attn"], apply_norm_params(cfg, bp["self_norm"], x_c),
+            kc, vc, pos, cfg)
+        x_c = x_c + h
+        q_in = apply_norm_params(cfg, bp["cross_norm"], x_c)
+        x_c = x_c + cross_attention_forward(bp["cross_attn"], q_in, ck, cv, cfg)
+        x_c = x_c + mlp_forward(bp["mlp"], apply_norm_params(cfg, bp["mlp_norm"], x_c), cfg)
+        return x_c, (kc, vc)
+
+    x, (k, v) = _scan(
+        body, x, (params["dec_blocks"], state["k"], state["v"],
+                  state["cross_k"], state["cross_v"]))
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    logits = tsl.matmul(x, params["head"])
+    return logits, {**state, "k": k, "v": v}
 
 
 def encdec_decode_step(params, state, tokens_t, pos, cfg):

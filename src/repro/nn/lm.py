@@ -19,7 +19,8 @@ def _scan(f, init, xs, **kw):
     return jax.lax.scan(f, init, xs, unroll=_nn_flags.scan_unroll(), **kw)
 
 
-from .attention import attention_decode, attention_forward, init_attention
+from .attention import (attention_decode, attention_forward, attention_prefill_chunk,
+                        init_attention)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .mlp import init_mlp, mlp_forward
 from .moe import init_moe, moe_forward
@@ -148,6 +149,41 @@ def lm_prefill(params, tokens, cfg, *, max_len: int, vision_embeds=None):
         widths = ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0))
         k, v = jnp.pad(k, widths), jnp.pad(v, widths)
     return logits[:, -1], {"k": k, "v": v}
+
+
+def lm_prefill_chunk(params, state, tokens, pos, cfg, *, vision_embeds=None):
+    """Continuation prefill of one chunk into a live decode state.
+
+    tokens (B,C): the next chunk of the prompt; ``pos`` (scalar, may be
+    traced) is the cache fill before this chunk — the chunk's K/V land at
+    rows [pos, pos+C) and its queries attend causally to everything up to
+    themselves. ``vision_embeds`` (vlm, first chunk only, (B,prefix,D))
+    prepends the projected vision prefix rows to the chunk.
+
+    Trailing padding rows in the chunk need no masking (see
+    attention_prefill_chunk); the caller reads logits at its last real row.
+    Returns (logits (B, C', V) with C' = prefix+C on the vision chunk, new
+    state)."""
+    x = embed_inputs(params, tokens, cfg, vision_embeds)
+
+    def body(x_c, inp):
+        bp, kc, vc = inp
+        h, kc, vc = attention_prefill_chunk(
+            bp["attn"], apply_norm_params(cfg, bp["attn_norm"], x_c),
+            kc, vc, pos, cfg)
+        x_c = x_c + h
+        y = apply_norm_params(cfg, bp["mlp_norm"], x_c)
+        if cfg.n_experts:
+            y, _ = moe_forward(bp["moe"], y, cfg)
+        else:
+            y = mlp_forward(bp["mlp"], y, cfg)
+        return x_c + y, (kc, vc)
+
+    x, (k_new, v_new) = _scan(body, x, (params["blocks"], state["k"],
+                                        state["v"]))
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    logits = lm_head(params, x, cfg)
+    return logits, {"k": k_new, "v": v_new}
 
 
 def lm_decode_step(params, state, tokens_t, pos, cfg):

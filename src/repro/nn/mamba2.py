@@ -57,24 +57,47 @@ def _discretize(p, dt_raw, x, cfg):
     return a.astype(x.dtype), x_scaled, xh
 
 
-def mamba2_forward(p, x_seq, cfg, *, h0=None, conv_prev=None):
-    """x_seq: (B,T,D) -> (y (B,T,D), (h_final, conv_tail))."""
+def mamba2_forward(p, x_seq, cfg, *, h0=None, conv_prev=None, n_real=None):
+    """x_seq: (B,T,D) -> (y (B,T,D), (h_final, conv_tail)).
+
+    ``n_real`` (scalar, may be traced): positions >= n_real are padding —
+    their SSD update is forced to the identity (decay 1, input 0) so
+    ``h_final`` is exactly the state after the last REAL token, and the conv
+    tail ends at the last real row. Their y rows are garbage the caller
+    discards. ``conv_prev`` ((B, KW-1, d_in)) continues a prior chunk's conv
+    window; zeros == fresh start (causal_conv1d zero-pads identically)."""
     bsz, t, d = x_seq.shape
     d_in, nh, n, p_dim = dims(cfg)
+    kw = cfg.conv_width
     zxbcdt = tsl.matmul(x_seq, p["in_proj"])
     z, xr, b, c, dt_raw = _split_proj(zxbcdt, cfg)
-    if conv_prev is not None:
-        xr_in = jnp.concatenate([conv_prev, xr], axis=1)
-        xc = tsl.causal_conv1d(xr_in, p["conv_w"])[:, conv_prev.shape[1]:]
+    if conv_prev is None and kw > 1:
+        conv_prev = jnp.zeros((bsz, kw - 1, xr.shape[-1]), xr.dtype)
+    if kw > 1:
+        xr_in = jnp.concatenate([conv_prev.astype(xr.dtype), xr], axis=1)
+        xc = tsl.causal_conv1d(xr_in, p["conv_w"])[:, kw - 1:]
     else:
+        xr_in = xr
         xc = tsl.causal_conv1d(xr, p["conv_w"])
     xc = tsl.silu(xc)
     a, x_scaled, xh = _discretize(p, dt_raw, xc, cfg)
+    if n_real is not None:
+        valid = jnp.arange(t) < n_real                       # (T,)
+        a = jnp.where(valid[None, :, None], a, jnp.ones_like(a))
+        x_scaled = jnp.where(valid[None, :, None, None], x_scaled,
+                             jnp.zeros_like(x_scaled))
     y, h_final = tsl.ssd_scan(x_scaled, a, b, c, h0=h0)
     y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
     y = y.reshape(bsz, t, d_in)
     y = tsl.rmsnorm(y * tsl.silu(z), p["gate_norm_w"], eps=cfg.norm_eps)
-    conv_tail = xr[:, -(cfg.conv_width - 1):] if cfg.conv_width > 1 else None
+    if kw > 1:
+        # window of KW-1 rows ending at the last real row: xr_in row
+        # (kw-1) + n_real - 1 — a dynamic slice so n_real may be traced
+        # (and it degrades gracefully to leading zeros when n_real < KW-1)
+        end = t if n_real is None else n_real
+        conv_tail = jax.lax.dynamic_slice_in_dim(xr_in, end, kw - 1, axis=1)
+    else:
+        conv_tail = None
     return tsl.matmul(y, p["out_proj"]), (h_final, conv_tail)
 
 

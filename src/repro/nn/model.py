@@ -5,6 +5,16 @@ build_model(cfg) returns a Model with a uniform surface:
     loss(params, batch) -> (scalar, metrics)
     forward_logits(params, batch) -> logits
     prefill(params, batch, max_len) -> (last_logits, state)
+    prefill_chunk(params, state, tokens, pos, kv_len, *,
+                  n_real=None, embeds=None) -> (logits (B,C',V), state)
+        (continuation prefill: consume one chunk of C prompt tokens into an
+         existing decode state whose caches hold ``kv_len`` real rows; the
+         chunk's K/V land at [pos, pos+C). ``n_real`` marks trailing padding
+         rows whose state updates are skipped exactly — callers read logits
+         at their last real row. ``embeds`` rides the FIRST chunk only: vlm
+         vision prefix rows (C' = prefix + C) / audio encoder frames.
+         Running every chunk then one decode step per generated token is
+         token-for-token identical to whole-prompt ``prefill``.)
     decode_step(params, state, tokens_t, pos) -> (logits, state)
         (pos: scalar, or a (B,) vector of per-slot positions — continuous
          batching; recurrent families ignore it, attention caches scatter
@@ -46,6 +56,8 @@ class Model:
     init: Callable
     _forward: Callable           # (params, batch, remat) -> (logits, aux, _)
     prefill: Callable            # (params, batch, max_len) -> (logits, state)
+    # (params, state, tokens, pos, kv_len, n_real=, embeds=) -> (logits, state)
+    prefill_chunk: Callable
     decode_step: Callable        # (params, state, tokens, pos) -> (logits, state)
     init_decode_state: Callable  # (batch, max_len, **kw) -> state
     state_batch_axes: Callable   # (state) -> pytree of slot-axis ints
@@ -133,6 +145,9 @@ def build_model(cfg: ArchConfig) -> Model:
             prefill=lambda p, batch, max_len: lm.lm_prefill(
                 p, batch["tokens"], cfg, max_len=max_len,
                 vision_embeds=batch.get("vision_embeds")),
+            prefill_chunk=lambda p, st, t, pos, kv_len, n_real=None,
+                embeds=None: lm.lm_prefill_chunk(
+                    p, st, t, pos, cfg, vision_embeds=embeds),
             decode_step=lambda p, st, t, pos: lm.lm_decode_step(p, st, t, pos, cfg),
             init_decode_state=lambda b, s, **kw: lm.init_decode_state(
                 cfg, b, s, jnp.dtype(cfg.dtype)),
@@ -148,6 +163,9 @@ def build_model(cfg: ArchConfig) -> Model:
             _forward=fwd,
             prefill=lambda p, batch, max_len: zamba.zamba_prefill(
                 p, batch["tokens"], cfg, max_len=max_len),
+            prefill_chunk=lambda p, st, t, pos, kv_len, n_real=None,
+                embeds=None: zamba.zamba_prefill_chunk(
+                    p, st, t, pos, cfg, n_real=n_real),
             decode_step=lambda p, st, t, pos: zamba.zamba_decode_step(
                 p, st, t, pos, cfg),
             init_decode_state=lambda b, s, **kw: zamba.init_zamba_state(
@@ -163,6 +181,9 @@ def build_model(cfg: ArchConfig) -> Model:
             init=lambda key: rwkv_lm.init_rwkv_lm(key, cfg),
             _forward=fwd,
             prefill=lambda p, batch, max_len: rwkv_prefill(p, batch, cfg),
+            prefill_chunk=lambda p, st, t, pos, kv_len, n_real=None,
+                embeds=None: rwkv_lm.rwkv_prefill_chunk(
+                    p, st, t, cfg, n_real=n_real),
             decode_step=lambda p, st, t, pos: rwkv_lm.rwkv_decode_step(
                 p, st, t, pos, cfg),
             init_decode_state=lambda b, s, **kw: rwkv_lm.init_rwkv_state(
@@ -182,6 +203,9 @@ def build_model(cfg: ArchConfig) -> Model:
             prefill=lambda p, batch, max_len: encdec.encdec_prefill(
                 p, batch["tokens"], cfg, audio_embeds=batch["audio_embeds"],
                 max_len=max_len),
+            prefill_chunk=lambda p, st, t, pos, kv_len, n_real=None,
+                embeds=None: encdec.encdec_prefill_chunk(
+                    p, st, t, pos, cfg, audio_embeds=embeds),
             decode_step=lambda p, st, t, pos: encdec.encdec_decode_step(
                 p, st, t, pos, cfg),
             # enc_len: serve engines size the per-request cross-state by the

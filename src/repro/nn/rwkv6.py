@@ -56,8 +56,29 @@ def _decay(p, xw):
     return jnp.exp(-jnp.exp(p["w_base"] + lora.astype(jnp.float32)))
 
 
-def time_mix_forward(p, x, cfg, *, prev_tok=None, s0=None):
-    """x (B,T,D) -> (y, (last_tok, s_final))."""
+def _last_real(x, n_real, prev):
+    """x (B,T,D) -> the row at index n_real-1 (B,D); n_real may be traced.
+
+    The token-shift carry for the NEXT chunk must be the last REAL token's
+    normed activation, not a padding row's. An ALL-padding chunk
+    (n_real == 0) must pass the incoming carry ``prev`` through unchanged
+    (zeros on a fresh start — what token_shift pads with)."""
+    if n_real is None:
+        return x[:, -1]
+    n_real = jnp.asarray(n_real)
+    last = jnp.take(x, jnp.maximum(n_real, 1) - 1, axis=1)
+    keep = prev if prev is not None else jnp.zeros_like(last)
+    return jnp.where(n_real > 0, last, keep.astype(last.dtype))
+
+
+def time_mix_forward(p, x, cfg, *, prev_tok=None, s0=None, n_real=None):
+    """x (B,T,D) -> (y, (last_tok, s_final)).
+
+    ``n_real`` (scalar, may be traced): positions >= n_real are padding —
+    their WKV update is forced to the identity (decay 1, key 0) so
+    ``s_final`` is exactly the state after the last real token, and
+    ``last_tok`` is gathered at n_real-1. Pad y rows are garbage the caller
+    discards (causality: they never feed a real position)."""
     bsz, t, d = x.shape
     nh, hk = dims(cfg)
     xr = tsl.token_shift(x, p["mu_r"], prev=prev_tok)
@@ -69,11 +90,15 @@ def time_mix_forward(p, x, cfg, *, prev_tok=None, s0=None):
     k = tsl.matmul(xk, p["wk"]).reshape(bsz, t, nh, hk)
     v = tsl.matmul(xv, p["wv"]).reshape(bsz, t, nh, hk)
     w = _decay(p, xw).reshape(bsz, t, nh, hk).astype(x.dtype)
+    if n_real is not None:
+        valid = (jnp.arange(t) < n_real)[None, :, None, None]
+        w = jnp.where(valid, w, jnp.ones_like(w))
+        k = jnp.where(valid, k, jnp.zeros_like(k))
     g = tsl.silu(tsl.matmul(xg, p["wg"]))
     y, s_final = tsl.wkv6_scan(r, k, v, w, p["u_bonus"], s0=s0)
     y = y.reshape(bsz, t, d)
     y = tsl.rmsnorm(y, p["ln_x_w"], eps=cfg.norm_eps) * g
-    return tsl.matmul(y, p["wo"]), (x[:, -1], s_final)
+    return tsl.matmul(y, p["wo"]), (_last_real(x, n_real, prev_tok), s_final)
 
 
 def time_mix_decode(p, x_t, cfg, prev_tok, s):
@@ -96,9 +121,10 @@ def time_mix_decode(p, x_t, cfg, prev_tok, s):
     return tsl.matmul(yt, p["wo"]), x_t[:, -1], s
 
 
-def channel_mix_forward(p, x, cfg, *, prev_tok=None):
+def channel_mix_forward(p, x, cfg, *, prev_tok=None, n_real=None):
     xk = tsl.token_shift(x, p["cm_mu_k"], prev=prev_tok)
     xr = tsl.token_shift(x, p["cm_mu_r"], prev=prev_tok)
     k = tsl.matmul(xk, p["cm_wk"])
     k = jnp.square(jax.nn.relu(k))
-    return tsl.sigmoid(tsl.matmul(xr, p["cm_wr"])) * tsl.matmul(k, p["cm_wv"]), x[:, -1]
+    out = tsl.sigmoid(tsl.matmul(xr, p["cm_wr"])) * tsl.matmul(k, p["cm_wv"])
+    return out, _last_real(x, n_real, prev_tok)

@@ -48,8 +48,13 @@ def init_rwkv_lm(key, cfg):
 
 def rwkv_forward(params, tokens, cfg, *, remat: bool = True,
                  collect_state: bool = False, state=None,
-                 last_only: bool = False):
-    """tokens (B,S) -> (logits, aux=0, states|None)."""
+                 last_only: bool = False, n_real=None):
+    """tokens (B,S) -> (logits, aux=0, states|None).
+
+    ``n_real`` (scalar, may be traced): positions >= n_real are padding —
+    the recurrent updates skip them exactly (chunked continuation prefill of
+    a bucket-padded prompt), and collected states are those after the last
+    REAL token. Pad logits rows are garbage the caller discards."""
     x = tsl.embed_lookup(params["embed"], tokens)
     x = apply_norm_params(cfg, params["ln_in"], x)
     if state is None:
@@ -59,10 +64,12 @@ def rwkv_forward(params, tokens, cfg, *, remat: bool = True,
         bp, tm_prev, cm_prev, s0 = inp
         xin = apply_norm_params(cfg, bp["ln1"], x)
         y, (tm_last, s_final) = time_mix_forward(bp["mix"], xin, cfg,
-                                                 prev_tok=tm_prev, s0=s0)
+                                                 prev_tok=tm_prev, s0=s0,
+                                                 n_real=n_real)
         x = x + y
         xin2 = apply_norm_params(cfg, bp["ln2"], x)
-        y, cm_last = channel_mix_forward(bp["mix"], xin2, cfg, prev_tok=cm_prev)
+        y, cm_last = channel_mix_forward(bp["mix"], xin2, cfg,
+                                         prev_tok=cm_prev, n_real=n_real)
         out = (tm_last, cm_last, s_final) if collect_state else None
         from repro.dist.sharding import logical_constraint
         return logical_constraint(x + y, "batch", None, None), out
@@ -100,6 +107,16 @@ def state_batch_axes(state):
     """Slot-axis position per state leaf (serve-layer state surgery): every
     recurrent leaf is (L, B, ...) — the request axis sits at 1."""
     return {k: 1 for k in state}
+
+
+def rwkv_prefill_chunk(params, state, tokens, cfg, *, n_real=None):
+    """Continuation prefill of one chunk: consume ``tokens`` (B,C) into the
+    carried recurrent state (zeros == fresh start). Returns (logits (B,C,V),
+    new state). Position-free: the serve-layer pos/kv_len args don't apply."""
+    logits, _, new_state = rwkv_forward(params, tokens, cfg, remat=False,
+                                        collect_state=True, state=state,
+                                        n_real=n_real)
+    return logits, new_state
 
 
 def rwkv_decode_step(params, state, tokens_t, pos, cfg):

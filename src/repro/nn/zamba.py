@@ -21,7 +21,8 @@ def _scan(f, init, xs, **kw):
     return jax.lax.scan(f, init, xs, unroll=_nn_flags.scan_unroll(), **kw)
 
 
-from .attention import attention_decode, attention_forward, init_attention
+from .attention import (attention_decode, attention_forward, attention_prefill_chunk,
+                        init_attention)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .lm import lm_head
 from .mamba2 import dims as m2_dims, init_mamba2, mamba2_decode, mamba2_forward
@@ -122,6 +123,45 @@ def zamba_prefill(params, tokens, cfg, *, max_len: int):
         state["conv_rest"] = conv_r
     x = apply_norm_params(cfg, params["final_norm"], x[:, -1:])
     return lm_head(params, x, cfg)[:, 0], state
+
+
+def zamba_prefill_chunk(params, state, tokens, pos, cfg, *, n_real=None):
+    """Continuation prefill of one chunk into a live hybrid decode state:
+    the mamba layers carry (h, conv) forward exactly (padding rows are
+    identity updates — see mamba2_forward), the shared attention block
+    writes the chunk's K/V at rows [pos, pos+C) of each group's cache.
+    Returns (logits (B,C,V), new state)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+
+    def mamba_body(x_c, inp):
+        bp, h0, conv_prev = inp
+        y, (h_f, conv_tail) = mamba2_forward(
+            bp["mamba"], apply_norm_params(cfg, bp["norm"], x_c), cfg,
+            h0=h0, conv_prev=conv_prev, n_real=n_real)
+        return x_c + y, (h_f, conv_tail)
+
+    def group_body(x_c, inp):
+        gp, h_g, conv_g, kc, vc = inp
+        x_c, (h_new, conv_new) = _scan(mamba_body, x_c, (gp, h_g, conv_g))
+        a, kc, vc = attention_prefill_chunk(
+            params["shared_attn"],
+            apply_norm_params(cfg, params["shared_attn_norm"], x_c),
+            kc, vc, pos, cfg)
+        return x_c + a, (h_new, conv_new, kc, vc)
+
+    x, (h, conv, kc, vc) = _scan(
+        group_body, x,
+        (params["groups"], state["h"], state["conv"],
+         state["attn_k"], state["attn_v"]))
+    new_state = {"h": h, "conv": conv, "attn_k": kc, "attn_v": vc}
+    if "rest" in params:
+        x, (h_r, conv_r) = _scan(
+            mamba_body, x, (params["rest"], state["h_rest"],
+                            state["conv_rest"]))
+        new_state["h_rest"] = h_r
+        new_state["conv_rest"] = conv_r
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return lm_head(params, x, cfg), new_state
 
 
 def init_zamba_state(cfg, batch: int, max_len: int, dtype):

@@ -12,10 +12,12 @@ See README.md in this directory for the slot/state-surgery contract.
 """
 
 from .engine import SamplingConfig, ServeEngine
-from .scheduler import CostModelAdmission, Request, RequestMetrics, Scheduler
+from .scheduler import (BucketPolicy, CostModelAdmission, Request,
+                        RequestMetrics, Scheduler, upd_serve_defaults)
 from .slots import take_slot, validate_donor
 
 __all__ = [
+    "BucketPolicy",
     "CostModelAdmission",
     "Request",
     "RequestMetrics",
@@ -23,5 +25,6 @@ __all__ = [
     "Scheduler",
     "ServeEngine",
     "take_slot",
+    "upd_serve_defaults",
     "validate_donor",
 ]

@@ -1,21 +1,35 @@
-"""Per-step continuous-batching serving engine.
+"""Per-step continuous-batching serving engine with chunked prefill.
 
-One fixed-shape batched decode state (the slot table) runs one jitted decode
-step per iteration; ANY slot that frees is refilled from the request queue
-BEFORE the next step — a finished sequence never idles its slot while
-neighbours drain (the wave-loop failure mode this engine replaces). All
-device-side shapes are static — (B, 1) tokens, (B,) per-slot positions, the
-state pytree — so the decode step compiles exactly once per engine, and
-admission is state surgery (``Model.insert_slot``), not reshaping.
+One fixed-shape batched decode state (the slot table) runs ONE unified step
+per iteration: every in-flight prefill advances by exactly one fixed-size
+chunk (``prefill_chunk`` tokens grafted into its reserved slot's cache by
+state surgery), then one jitted decode step runs over every occupied slot.
+Long prompts therefore never stall token generation for running slots — a
+1000-token prompt is ~(1000/chunk) interleaved chunk steps, with decode
+emitting a token for every running request in each of them.
 
-Prefill runs per request at its natural prompt length (one compile per
-distinct length — callers who care bucket their prompt lengths), then the
-prefilled single-request state is grafted into the freed slot.
+Prompts are padded to UPD-declared length buckets before admission
+(``BucketPolicy``), and every bucket is an exact multiple of the chunk size,
+so the engine only ever runs shapes it has compiled before: ONE prefill-chunk
+shape (plus one first-chunk shape for families with per-request media) and
+ONE decode shape — bounded by len(buckets) + 1 per family. Bucket padding is
+mathematically exact: pad rows' state updates are skipped (``n_real``
+masking in ``Model.prefill_chunk``) and the first token is sampled at the
+last REAL row, so chunked+bucketed prefill is token-for-token identical to
+whole-prompt prefill.
 
-Metrics per request: TTFT, decode tokens/s, end-to-end latency, SLA hit;
-per engine run: real-token throughput (padded/idle slots never counted),
-steady-state padded-slot steps (0 == true continuous batching), slot-reuse
-counts, the admission log, and every refusal with its cost-model reason.
+Requests arrive asynchronously: ``submit()`` (or a preset ``arrival_s`` on
+the request) makes a request visible to admission only once the engine clock
+reaches its arrival — TTFT and SLA accounting are measured from that arrival,
+and shared-step wall time is attributed proportionally to prefill vs decode
+tokens so a neighbour's chunk work never inflates a request's decode-t/s.
+
+Metrics per request: TTFT, prefill_s/decode_s attribution, decode tokens/s,
+end-to-end latency, SLA hit, bucket; per engine run: real-token throughput
+(padded/idle slots never counted), steady-state padded-slot steps (0 == true
+continuous batching), TTFT percentiles split by bucket, slot-reuse counts,
+the per-step log (chunks run / tokens decoded), the admission log, and every
+refusal with its cost-model reason.
 """
 
 from __future__ import annotations
@@ -29,7 +43,8 @@ import numpy as np
 
 from repro.nn.model import build_model
 
-from .scheduler import CostModelAdmission, Request, Scheduler
+from .scheduler import (BucketPolicy, CostModelAdmission, Refusal, Request,
+                        Scheduler)
 from .slots import validate_donor
 
 
@@ -41,10 +56,34 @@ class SamplingConfig:
     top_k: int = 0
 
 
+@dataclass
+class _PrefillTask:
+    """Host-side tracking of one request's chunk schedule.
+
+    The in-flight prefill lives in a batch-1 DONOR state outside the slot
+    table, not in the reserved slot itself: the batched decode step runs
+    over the FULL table every iteration, and a reserved slot's lane would be
+    advanced with a garbage token between chunk steps (clobbering K/V rows
+    at its stale position, corrupting recurrent state). The donor is grafted
+    into the slot once, at completion."""
+
+    req: Request
+    slot: int
+    padded: np.ndarray          # (1, bucket) prompt padded to its bucket
+    n_chunks: int
+    donor: object               # batch-1 decode-state pytree being filled
+    chunk_idx: int = 0
+    fill: int = 0               # REAL rows in the donor's cache (incl. prefix)
+    first_logits: np.ndarray | None = None   # logits at the last real row
+    prefill_s: float = 0.0
+
+
 class ServeEngine:
     def __init__(self, cfg, *, batch: int, max_len: int,
                  sampling: SamplingConfig | None = None, seed: int = 0,
-                 enc_len: int | None = None, admission: bool = True):
+                 enc_len: int | None = None, admission: bool = True,
+                 prefill_chunk: int | None = None,
+                 buckets: tuple[int, ...] | None = None):
         if cfg.family == "audio" and enc_len is None:
             raise ValueError("audio family: pass enc_len (the fixed encoder "
                              "length every request's frames are sized to)")
@@ -55,22 +94,54 @@ class ServeEngine:
         self.sampling = sampling or SamplingConfig()
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed))
-        # the donor cache is filled to prompt_len + decode_prefix (vlm vision
+        # the slot cache is filled to prompt_len + decode_prefix (vlm vision
         # rows), and decode must write AFTER it
         self._prefix = cfg.decode_prefix
+        # chunk size + admissible padded prompt lengths are UPD data (the
+        # serve: block on attention_prefill_chunk); buckets that cannot fit
+        # the slot table (prefix + bucket + 1 gen token) are dropped, and an
+        # engine with none left falls back to the largest chunk multiple
+        # that fits, so tiny test tables still serve
+        base = BucketPolicy.from_upd(chunk=prefill_chunk, buckets=buckets)
+        chunk = base.chunk
+        fit = tuple(b for b in base.buckets
+                    if self._prefix + b + 1 <= max_len)
+        if not fit:
+            largest = ((max_len - self._prefix - 1) // chunk) * chunk
+            if largest < chunk:
+                raise ValueError(
+                    f"max_len={max_len} leaves no room for a single "
+                    f"prefill chunk of {chunk}")
+            fit = (largest,)
+        self.policy = BucketPolicy(fit, chunk)
         self.cost_model = CostModelAdmission(cfg, batch, max_len,
-                                             enc_len=enc_len) \
+                                             enc_len=enc_len,
+                                             policy=self.policy) \
             if admission else None
-        self._prefill = jax.jit(self.model.prefill, static_argnums=(2,))
         # donate the incoming state: it is dead after every call, and without
         # donation each step/insert/reset copies the full multi-layer cache
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
         self._insert = jax.jit(self.model.insert_slot, donate_argnums=(0,))
         self._reset = jax.jit(self.model.reset_slot, donate_argnums=(0,))
+        self._chunk = jax.jit(self._chunk_fn, donate_argnums=(1,))
         self._sample = self._build_sampler()
         self._key = jax.random.PRNGKey(seed + 1)
+        self._inbox: list[Request] = []
 
     # -- helpers --------------------------------------------------------------
+
+    def _chunk_fn(self, params, donor, tokens, pos, n_real, embeds=None):
+        """One continuation-prefill chunk into the batch-1 donor state;
+        returns the logits row at the chunk's last REAL token and the
+        updated donor. ``pos``/``n_real`` are traced — one compiled shape
+        covers every fill level and padding amount."""
+        logits, donor = self.model.prefill_chunk(
+            params, donor, tokens, pos, pos, n_real=n_real, embeds=embeds)
+        # vlm/audio first chunk prepends prefix rows: index relative to them
+        prefix = logits.shape[1] - tokens.shape[1]
+        idx = prefix + jnp.maximum(n_real, 1) - 1
+        last = jnp.take(logits, idx, axis=1)                # (1, V)
+        return last, donor
 
     def _build_sampler(self):
         temp, top_k = self.sampling.temperature, self.sampling.top_k
@@ -98,24 +169,45 @@ class ServeEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
-    def _make_batch(self, prompts: np.ndarray, embeds=None) -> dict:
-        cfg = self.cfg
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        if cfg.family == "vlm":
-            batch["vision_embeds"] = (
-                jnp.asarray(embeds, cfg.dtype)[None] if embeds is not None
-                else jnp.zeros((len(prompts), cfg.vision_prefix, cfg.d_model),
-                               cfg.dtype))
-        if cfg.family == "audio":
-            batch["audio_embeds"] = (
-                jnp.asarray(embeds, cfg.dtype)[None] if embeds is not None
-                else jnp.zeros((len(prompts), self.enc_len, cfg.d_model),
-                               cfg.dtype))
-        return batch
-
     def _init_state(self):
         return self.model.init_decode_state(self.batch, self.max_len,
                                             enc_len=self.enc_len)
+
+    def _first_chunk_embeds(self, req: Request):
+        """Per-request media for the FIRST chunk: vlm vision prefix rows /
+        audio encoder frames (zeros when the request carries none)."""
+        cfg = self.cfg
+        if cfg.family == "vlm":
+            if req.embeds is not None:
+                return jnp.asarray(req.embeds, cfg.dtype)[None]
+            return jnp.zeros((1, cfg.vision_prefix, cfg.d_model), cfg.dtype)
+        if cfg.family == "audio":
+            if req.embeds is not None:
+                return jnp.asarray(req.embeds, cfg.dtype)[None]
+            return jnp.zeros((1, self.enc_len, cfg.d_model), cfg.dtype)
+        return None
+
+    def jit_cache_sizes(self) -> dict:
+        """Compiled-entry counts of the engine's jitted device functions —
+        the probe behind the "never runs a shape it hasn't compiled" claim
+        (bounded by len(buckets) + 1 per family). ``_cache_size`` is a
+        private jax API: report -1 rather than dying if it moves."""
+
+        def sz(fn) -> int:
+            try:
+                return int(fn._cache_size())
+            except Exception:
+                return -1
+
+        return {"prefill_chunk": sz(self._chunk), "decode": sz(self._decode)}
+
+    # -- async ingestion ------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Hand a request to a RUNNING engine loop: it is drained into the
+        scheduler at the next step boundary and stamped/gated by its
+        arrival_s like any trace-driven request."""
+        self._inbox.append(req)
 
     # -- the serving loop -----------------------------------------------------
 
@@ -138,14 +230,38 @@ class ServeEngine:
         tokens = jnp.zeros((self.batch, 1), jnp.int32)
         pos_host = np.zeros(self.batch, np.int64)
         outputs: dict[str, list[int]] = {}
+        tasks: list[_PrefillTask] = []
+        step_log: list[dict] = []
         step = 0
         padded_steady = 0
         generated = 0
+        prefill_tokens_total = 0
+        chunk = self.policy.chunk
 
-        while sched.has_work():
-            # admission phase: refill EVERY free slot before the next step —
-            # re-reading free_slots() each pass, since a gen_len==1 request
-            # completes AT admission and frees its slot for the next in line
+        seen_rids = set(rids)
+        while sched.has_work() or tasks or self._inbox:
+            t_step0 = time.perf_counter()
+            # pop-drain (never iterate-then-clear): a concurrent submit()
+            # landing between the two would be silently dropped
+            while self._inbox:
+                r = self._inbox.pop(0)
+                # streamed requests get the same validation as run()'s list,
+                # but as recorded refusals — one bad submit must not kill
+                # the loop for everyone already being served
+                if r.rid in seen_rids:
+                    sched.refused.append(Refusal(
+                        r.rid, "invalid: duplicate rid in this run"))
+                    continue
+                if r.gen_len < 1:
+                    sched.refused.append(Refusal(
+                        r.rid, "invalid: gen_len must be >= 1 (the first "
+                               "token always comes from prefill)"))
+                    continue
+                seen_rids.add(r.rid)
+                sched.submit(r, now())
+            sched.release(now())
+
+            # -- reservation: every free slot starts a chunk schedule --------
             while True:
                 free = sched.free_slots()
                 if not free:
@@ -153,65 +269,143 @@ class ServeEngine:
                 req = sched.next_admissible(now())
                 if req is None:
                     break
-                slot = free[0]
-                prompt = np.asarray(req.tokens, np.int64)[None, :]
-                logits1, donor = self._prefill(
-                    self.params, self._make_batch(prompt, req.embeds),
-                    self.max_len)
-                validate_donor(state, donor,
-                               self.model.state_batch_axes(state))
-                state = self._insert(state, donor, slot)
-                first = int(np.asarray(
-                    self._sample(logits1, self._next_key()))[0])
-                sched.place(req, slot, step)
-                sched.first_token(slot, now())
-                generated += 1
-                outputs[req.rid] = [first]
-                tokens = tokens.at[slot, 0].set(first)
-                pos_host[slot] = req.prompt_len + self._prefix
-                if sched.slot_done(slot):        # gen_len == 1 edge case
-                    sched.finish(slot, now())
-                    state = self._reset(state, slot)
+                bucket = req.bucket or self.policy.assign(req.prompt_len)
+                if not bucket:
+                    # admission off + prompt beyond the largest bucket: still
+                    # cover the whole prompt in whole chunks (the max_len
+                    # overrun guard below stays the only hard stop)
+                    bucket = BucketPolicy.round_up(req.prompt_len, chunk)
+                req.bucket = bucket
+                padded = np.zeros((1, bucket), np.int64)
+                padded[0, :req.prompt_len] = np.asarray(req.tokens, np.int64)
+                tasks.append(_PrefillTask(
+                    req=req, slot=free[0], padded=padded,
+                    n_chunks=bucket // chunk,
+                    donor=self.model.init_decode_state(
+                        1, self.max_len, enc_len=self.enc_len)))
+                sched.reserve(free[0], req, step)
+
+            # -- unified step, phase 1: one chunk per in-flight prefill ------
+            ran: list[_PrefillTask] = []
+            for task in tasks:
+                c0 = task.chunk_idx * chunk
+                seg = jnp.asarray(task.padded[:, c0:c0 + chunk], jnp.int32)
+                n_real = max(0, min(task.req.prompt_len - c0, chunk))
+                embeds = self._first_chunk_embeds(task.req) \
+                    if task.chunk_idx == 0 else None
+                writes = chunk + (self._prefix if task.chunk_idx == 0 else 0)
+                if task.fill + writes > self.max_len:
+                    raise RuntimeError(
+                        f"prefill chunk for {task.req.rid!r} would overrun "
+                        f"max_len={self.max_len} (admission off?)")
+                last, task.donor = self._chunk(
+                    self.params, task.donor, seg,
+                    jnp.int32(task.fill), jnp.int32(n_real), embeds)
+                task.chunk_idx += 1
+                ran.append(task)
+                if task.chunk_idx == 1:
+                    task.fill += self._prefix       # vlm vision rows
+                if n_real:
+                    task.fill += n_real
+                    task.first_logits = np.asarray(last)    # syncs the chunk
+            chunk_tokens = len(ran) * chunk
+            prefill_tokens_total += chunk_tokens
 
             active = sched.active_slots()
-            if not active:
-                # nothing decoding (e.g. every admitted request finished at
-                # admission with gen_len == 1) — but the queue may still hold
-                # work, so loop back to admission rather than exiting
-                continue
             if sched.queue:
-                # queue still has work: every free slot this step is waste.
-                # With per-step admission this is 0 by construction — the
-                # counter is a tripwire so any future scheduling policy that
-                # delays admission (waves, arrival times, deferred refusals)
-                # surfaces its cost here instead of silently regressing
-                padded_steady += self.batch - len(active)
+                # released queue still has work: every free, unreserved slot
+                # this step is waste. With per-step admission this is 0 by
+                # construction — the counter is a tripwire so any future
+                # scheduling policy that delays admission surfaces its cost
+                # here instead of silently regressing
+                padded_steady += self.batch - len(active) - len(tasks)
 
-            if int(pos_host[active].max()) >= self.max_len:
-                # reachable only with admission=False (admission's
-                # over_budget check forbids it): fail loudly rather than
-                # silently clobbering the last cache row
-                raise RuntimeError(
-                    f"active slot position {int(pos_host[active].max())} "
-                    f"overran max_len={self.max_len}")
-            pos_vec = jnp.asarray(pos_host, jnp.int32)
-            logits, state = self._decode(self.params, state, tokens, pos_vec)
-            toks = np.asarray(self._sample(logits, self._next_key()))
-            tokens = jnp.asarray(toks[:, None], jnp.int32)
-            for slot in active:
-                rid = sched.slots[slot].request.rid
-                sched.step_done(slot)
-                pos_host[slot] += 1
-                outputs[rid].append(int(toks[slot]))
+            # -- phase 2: one decode step over every occupied slot -----------
+            if active:
+                if int(pos_host[active].max()) >= self.max_len:
+                    # reachable only with admission=False (admission's
+                    # over_budget check forbids it): fail loudly rather than
+                    # silently clobbering the last cache row
+                    raise RuntimeError(
+                        f"active slot position {int(pos_host[active].max())} "
+                        f"overran max_len={self.max_len}")
+                pos_vec = jnp.asarray(pos_host, jnp.int32)
+                logits, state = self._decode(self.params, state, tokens,
+                                             pos_vec)
+                toks = np.asarray(self._sample(logits, self._next_key()))
+                tokens = jnp.asarray(toks[:, None], jnp.int32)
+                for slot in active:
+                    rid = sched.slots[slot].request.rid
+                    sched.step_done(slot)
+                    pos_host[slot] += 1
+                    outputs[rid].append(int(toks[slot]))
+                    generated += 1
+
+            # -- phase 3: shared-step time attribution (prefill vs decode) ---
+            t_step = time.perf_counter() - t_step0
+            pre_share, _ = sched.attribute_step_time(t_step, chunk_tokens,
+                                                     active)
+            for task in ran:
+                task.prefill_s += pre_share / max(len(ran), 1)
+
+            if ran or active:
+                step_log.append({"step": step,
+                                 "prefill_rids": [t.req.rid for t in ran],
+                                 "chunks": len(ran),
+                                 "decoded": len(active)})
+
+            # -- phase 4: completions (finished prefills + finished decodes) -
+            for task in list(tasks):
+                if task.chunk_idx < task.n_chunks:
+                    continue
+                # prefill complete: graft the donor into its reserved slot,
+                # sample the first token, occupy
+                first = int(np.asarray(self._sample(
+                    jnp.asarray(task.first_logits), self._next_key()))[0])
+                slot = task.slot
+                validate_donor(state, task.donor,
+                               self.model.state_batch_axes(state))
+                state = self._insert(state, task.donor, slot)
+                sched.place(task.req, slot)
+                sched.add_prefill_time(slot, task.prefill_s)
+                sched.first_token(slot, now())
                 generated += 1
+                outputs[task.req.rid] = [first]
+                tokens = tokens.at[slot, 0].set(first)
+                pos_host[slot] = task.fill
+                tasks.remove(task)
+                if sched.slot_done(slot):           # gen_len == 1 edge case
+                    sched.finish(slot, now())
+                    state = self._reset(state, slot)
+            for slot in list(active):
                 if sched.slot_done(slot):
                     sched.finish(slot, now())
                     state = self._reset(state, slot)
-            step += 1
+
+            if ran or active:
+                step += 1           # a unified step actually did device work
+            elif not sched.active_slots() and not tasks:
+                nxt = sched.next_arrival_s()
+                if nxt is not None and not sched.queue and not self._inbox:
+                    # idle until the next scheduled arrival
+                    time.sleep(max(0.0, min(nxt - now(), 0.05)))
 
         wall = max(now(), 1e-9)
         finished = sched.finished
         ttfts = [m.ttft_s for m in finished]
+
+        def pct(xs, q):
+            return float(np.percentile(xs, q)) if xs else 0.0
+
+        by_bucket: dict[int, list[float]] = {}
+        for m in finished:
+            by_bucket.setdefault(m.bucket, []).append(m.ttft_s)
+        ttft_by_bucket = {
+            b: {"n": len(xs), "p50_s": pct(xs, 50), "p90_s": pct(xs, 90),
+                "p99_s": pct(xs, 99)}
+            for b, xs in sorted(by_bucket.items())
+        }
+
         report = {
             "arch": self.cfg.name,
             "requests": len(finished),
@@ -220,10 +414,16 @@ class ServeEngine:
             "steps": step,
             "wall_s": wall,
             "padded_slot_steps_steady": padded_steady,
+            "prefill_chunk": chunk,
+            "buckets": list(self.policy.buckets),
+            "prefill_tokens": prefill_tokens_total,
             "ttft_s_mean": float(np.mean(ttfts)) if ttfts else 0.0,
+            "ttft_by_bucket": ttft_by_bucket,
             "sla_hit_rate": sched.sla_hit_rate(),
             "slot_reuse": sched.slot_reuse(),
             "admission_log": sched.admission_log,
+            "step_log": step_log,
+            "jit_cache": self.jit_cache_sizes(),
             "per_request": [asdict(m) for m in finished],
             "refused": [{"rid": r.rid, "reason": r.reason}
                         for r in sched.refused],
@@ -233,5 +433,7 @@ class ServeEngine:
             report["cost_model"] = {
                 "decode_bytes_per_step": self.cost_model.decode_bytes_per_step(),
                 "step_seconds": self.cost_model.step_seconds(),
+                "prefill_seconds_largest_bucket":
+                    self.cost_model.prefill_seconds(self.policy.buckets[-1]),
             }
         return report

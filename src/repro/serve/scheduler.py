@@ -1,26 +1,115 @@
 """Slot-table scheduler for per-step continuous batching.
 
 Pure host-side control plane — no jax in here. The engine owns the device
-state; the scheduler owns the request queue, the per-slot lifecycle
-(free -> occupied -> free), per-request SLA/deadline accounting, and the
-admission decision. Admission is roofline-informed: the cost model consumes
-the SAME analytic ``lib.cost()`` terms the generator selected the primitive
-implementations with (PAPER.md §cost channel), so "can this request meet its
-deadline on this hardware at this batch size" is answered from the UPD cost
-formulas + the v5e roofline constants, not from guesswork.
+state; the scheduler owns the request stream (arrival-gated queue), the
+per-slot lifecycle (free -> reserved-for-prefill -> occupied -> free),
+per-request SLA/deadline accounting, and the admission decision. Admission is
+roofline-informed: the cost model consumes the SAME analytic ``lib.cost()``
+terms the generator selected the primitive implementations with (PAPER.md
+§cost channel), so "can this request meet its deadline on this hardware at
+this batch size" is answered from the UPD cost formulas + the v5e roofline
+constants, not from guesswork.
 
-Refusals are permanent and carry a reason (``over_budget`` — the request
-does not fit the slot table's max_len; ``sla_infeasible`` — even the
-best-case estimate misses its deadline), so callers can re-shape and resubmit
-rather than letting a doomed request occupy a slot.
+Arrivals are asynchronous: ``submit()`` may be called with a future
+``arrival_s`` (a trace) or at any wall moment (a live caller); a request
+becomes visible to admission only once ``now >= arrival_s``, and every
+latency metric is measured from that arrival.
+
+Prompts are length-bucketed before admission (:class:`BucketPolicy`): each
+prompt is padded to the smallest UPD-declared bucket size, so the engine only
+ever runs prefill shapes from a small declared set — the ARM-SVE
+vector-length-agnostic discipline applied to serving. Bucket sizes and the
+prefill chunk size are UPD data (``attention_prefill_chunk``'s ``serve:``
+block in ``tsl_data/primitives/seq.yaml``), not engine constants.
+
+Refusals are permanent and carry a reason (``over_budget`` — the request's
+BUCKET does not fit the slot table's max_len or exceeds the largest declared
+bucket; ``sla_infeasible`` — even the best-case estimate misses its
+deadline), so callers can re-shape and resubmit rather than letting a doomed
+request occupy a slot.
 """
 
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass
 
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+# fallbacks when the UPD corpus is unavailable (mirrors the serve: block on
+# the attention_prefill_chunk primitive)
+DEFAULT_PREFILL_CHUNK = 8
+DEFAULT_BUCKETS = (8, 16, 32, 64, 128, 256, 512)
+
+
+def upd_serve_defaults() -> dict:
+    """The ``serve:`` block declared on the attention_prefill_chunk
+    primitive: {"chunk": int, "buckets": [int, ...]}. Falls back to module
+    defaults if the corpus (or the block) is missing — the serving path must
+    not die because a slimmed UPD dropped one primitive."""
+    try:
+        from repro.core import load_corpus
+
+        extra = load_corpus().primitives["attention_prefill_chunk"].extra
+        blk = dict(extra["serve"])
+        return {"chunk": int(blk["chunk"]),
+                "buckets": tuple(int(b) for b in blk["buckets"])}
+    except Exception:
+        return {"chunk": DEFAULT_PREFILL_CHUNK, "buckets": DEFAULT_BUCKETS}
+
+
+class BucketPolicy:
+    """Pad each prompt to the smallest declared bucket size.
+
+    Buckets must be sorted, unique, positive multiples of the prefill chunk
+    size — so every padded prompt decomposes into an exact number of
+    fixed-shape chunk steps (``bucket // chunk``), and the engine's compiled
+    prefill shapes are bounded by the declared set.
+    """
+
+    def __init__(self, buckets, chunk: int):
+        buckets = tuple(int(b) for b in buckets)
+        if not buckets or chunk < 1:
+            raise ValueError("need at least one bucket and chunk >= 1")
+        if list(buckets) != sorted(set(buckets)):
+            raise ValueError(f"buckets must be sorted and unique: {buckets}")
+        bad = [b for b in buckets if b <= 0 or b % chunk]
+        if bad:
+            raise ValueError(
+                f"buckets must be positive multiples of chunk={chunk}: {bad}")
+        self.buckets = buckets
+        self.chunk = int(chunk)
+
+    @classmethod
+    def from_upd(cls, chunk: int | None = None,
+                 buckets=None) -> "BucketPolicy":
+        """Policy from the UPD serve block. A caller-chosen ``chunk`` that
+        does not divide the declared buckets rounds each bucket UP to the
+        next chunk multiple (deduplicated) — the declared sizes are the
+        admissible prompt lengths, the executed schedule stays whole
+        chunks."""
+        d = upd_serve_defaults()
+        chunk = int(chunk if chunk is not None else d["chunk"])
+        cand = buckets if buckets is not None else d["buckets"]
+        rounded = sorted({cls.round_up(b, chunk) for b in cand})
+        return cls(rounded, chunk)
+
+    @staticmethod
+    def round_up(n: int, chunk: int) -> int:
+        """Smallest multiple of ``chunk`` >= n (the synthetic bucket for
+        out-of-policy prompt lengths)."""
+        return -(-int(n) // int(chunk)) * int(chunk)
+
+    def assign(self, prompt_len: int) -> int | None:
+        """Smallest bucket >= prompt_len, or None if none fits."""
+        for b in self.buckets:
+            if prompt_len <= b:
+                return b
+        return None
+
+    def n_chunks(self, bucket: int) -> int:
+        return bucket // self.chunk
 
 
 @dataclass
@@ -28,8 +117,11 @@ class Request:
     """One serving request: a prompt, a generation budget, an optional SLA.
 
     ``sla_s`` is an end-to-end latency deadline in seconds, measured from
-    ``submit`` — both admission (projection) and the final hit/miss
-    accounting are against it.
+    ``arrival_s`` — both admission (projection) and the final hit/miss
+    accounting are against it. ``arrival_s`` may be preset to a FUTURE
+    engine-clock time (trace-driven arrivals: the request stays invisible to
+    admission until then); when left at 0.0 ``submit`` stamps it with the
+    submission moment.
     """
 
     rid: str
@@ -38,7 +130,8 @@ class Request:
     sla_s: float | None = None
     embeds: object | None = None    # per-request media: vlm (prefix, D)
                                     # vision / audio (enc_len, D) frames
-    arrival_s: float = 0.0          # stamped by Scheduler.submit
+    arrival_s: float = 0.0          # preset (trace) or stamped by submit
+    bucket: int = 0                 # stamped at admission (BucketPolicy)
 
     @property
     def prompt_len(self) -> int:
@@ -53,13 +146,16 @@ class RequestMetrics:
     slot: int = -1
     prompt_len: int = 0
     gen_len: int = 0
+    bucket: int = 0                 # padded prompt length (length bucketing)
     tokens_out: int = 0
-    ttft_s: float = 0.0             # arrival -> first token (prefill + queue)
+    ttft_s: float = 0.0             # arrival -> first token (queue + prefill)
+    prefill_s: float = 0.0          # step time attributed to prefill chunks
+    decode_s: float = 0.0           # step time attributed to decode tokens
     decode_tokens_per_s: float = 0.0
     latency_s: float = 0.0          # arrival -> last token
     sla_s: float | None = None
     sla_met: bool | None = None     # None: no SLA attached
-    admitted_at_step: int = -1      # engine decode-step index at admission
+    admitted_at_step: int = -1      # engine step index at slot reservation
 
 
 @dataclass
@@ -75,7 +171,9 @@ class CostModelAdmission:
       bytes/step = param bytes (weights stream once per token)
                  + n_attn_layers x lib.cost("attention_decode", "bytes", ...)
       step_s     = bytes / HBM_BW
-    Prefill is modeled as compute-bound: 2·N·prompt_len / PEAK_FLOPS.
+    Prefill is modeled as compute-bound and priced at the request's BUCKET
+    (the padded length actually executed), parameter flops plus the
+    ``attention_prefill_chunk`` UPD cost term summed over the chunk schedule.
 
     Both are deliberately idealized (roofline = best case); a request whose
     deadline fails even the BEST case is hopeless, which makes refusal sound.
@@ -85,11 +183,13 @@ class CostModelAdmission:
     """
 
     def __init__(self, cfg, batch: int, max_len: int,
-                 enc_len: int | None = None):
+                 enc_len: int | None = None,
+                 policy: BucketPolicy | None = None):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
         self.enc_len = enc_len          # audio: fixed cross K/V length
+        self.policy = policy            # None -> exact-length admission
         self.prefix = cfg.decode_prefix
         self.param_bytes = cfg.param_count(
             active_only=(cfg.family == "moe")) * self._dtype_bytes()
@@ -153,14 +253,41 @@ class CostModelAdmission:
             self._step_s = self.decode_bytes_per_step() / HBM_BW
         return self._step_s
 
-    def prefill_seconds(self, prompt_len: int) -> float:
-        n = self.cfg.param_count(active_only=(self.cfg.family == "moe"))
-        return 2.0 * n * prompt_len / PEAK_FLOPS
+    def prefill_seconds(self, padded_len: int) -> float:
+        """Best-case prefill time for ``padded_len`` prompt tokens: parameter
+        flops + the attention_prefill_chunk cost term summed over the chunk
+        schedule (each chunk priced at its own growing cache fill)."""
+        cfg = self.cfg
+        n = cfg.param_count(active_only=(cfg.family == "moe"))
+        flops = 2.0 * n * padded_len
+        if self._attn_layers:
+            chunk = self.policy.chunk if self.policy else padded_len
+            fills = range(chunk, padded_len + 1, chunk) if chunk else ()
+
+            def chunk_flops(fill: int) -> float:
+                shapes = dict(B=1, H=cfg.n_heads, KH=cfg.n_kv_heads,
+                              C=chunk, S=self.prefix + fill, D=cfg.hd)
+                try:
+                    from repro.tsl_api import cost
+                    return cost("attention_prefill_chunk", "flops", **shapes)
+                except KeyError:
+                    return 4.0 * shapes["H"] * shapes["C"] * shapes["S"] \
+                        * shapes["D"]
+
+            flops += self._attn_layers * sum(chunk_flops(f) for f in fills)
+        return flops / PEAK_FLOPS
 
     def admit(self, req: Request, now_s: float) -> tuple[bool, str]:
-        if self.prefix + req.prompt_len + req.gen_len > self.max_len:
-            return False, (f"over_budget: prompt {req.prompt_len} + gen "
-                           f"{req.gen_len}"
+        if self.policy is not None:
+            bucket = self.policy.assign(req.prompt_len)
+            if bucket is None:
+                return False, (f"over_budget: prompt {req.prompt_len} exceeds "
+                               f"largest bucket {self.policy.buckets[-1]}")
+        else:
+            bucket = req.prompt_len
+        if self.prefix + bucket + req.gen_len > self.max_len:
+            return False, (f"over_budget: bucket {bucket} (prompt "
+                           f"{req.prompt_len}) + gen {req.gen_len}"
                            + (f" + vision prefix {self.prefix}"
                               if self.prefix else "")
                            + f" > max_len {self.max_len}")
@@ -169,53 +296,84 @@ class CostModelAdmission:
             # charge attention reads at THIS request's maximal cache fill,
             # not max_len: a short request in a large slot table must not be
             # refused on traffic it will never generate
-            s_req = self.prefix + req.prompt_len + req.gen_len
-            projected = (waited + self.prefill_seconds(req.prompt_len)
+            s_req = self.prefix + bucket + req.gen_len
+            projected = (waited + self.prefill_seconds(bucket)
                          + req.gen_len * self.step_seconds(s_req))
             if projected > req.sla_s:
                 return False, (f"sla_infeasible: projected {projected:.3e}s "
                                f"> sla {req.sla_s:.3e}s")
+        req.bucket = bucket
         return True, "ok"
 
 
 @dataclass
 class _Slot:
-    request: Request | None = None
+    request: Request | None = None     # occupied: decoding
+    reserved: Request | None = None    # reserved: prefill chunks in flight
     metrics: RequestMetrics | None = None
-    served: int = 0                 # lifetime requests this slot carried
+    served: int = 0                    # lifetime requests this slot carried
 
     @property
     def free(self) -> bool:
-        return self.request is None
+        return self.request is None and self.reserved is None
 
 
 class Scheduler:
-    """Request queue + slot table + SLA accounting.
+    """Arrival-gated request stream + slot table + SLA accounting.
 
-    Protocol (driven by the engine once per decode step):
-      submit(req, now)                 — enqueue (stamps arrival)
+    Protocol (driven by the engine once per unified step):
+      submit(req, now)                 — enqueue (future arrival_s -> pending)
+      release(now)                     — move arrived requests into the queue
       next_admissible(now)             — pop the next request that passes
                                          admission; refused requests are
                                          recorded and dropped
-      place(req, slot, step)           — occupy a slot (prefill done)
+      reserve(slot, req, step)         — slot enters prefill (chunks running)
+      place(req, slot)                 — prefill done: slot occupied
       first_token(slot, now)           — TTFT stamp
       step_done(slot)                  — one real token decoded in this slot
+      attribute_step_time(...)         — split a shared step's wall time
+                                         between prefill and decode tokens
       finish(slot, now) -> metrics     — request complete, slot freed
     """
 
     def __init__(self, n_slots: int, admission: CostModelAdmission | None = None):
         self.slots = [_Slot() for _ in range(n_slots)]
         self.queue: deque[Request] = deque()
+        self.pending: list[tuple[float, int, Request]] = []   # arrival heap
+        self._seq = 0
         self.admission = admission
         self.finished: list[RequestMetrics] = []
         self.refused: list[Refusal] = []
         self.admission_log: list[dict] = []   # {step, slot, rid} per admission
 
-    # -- queue ----------------------------------------------------------------
+    # -- request stream -------------------------------------------------------
 
     def submit(self, req: Request, now_s: float) -> None:
-        req.arrival_s = now_s
-        self.queue.append(req)
+        """Async-safe ingestion: a request with a future ``arrival_s`` is
+        held pending (invisible to admission) until the engine clock reaches
+        it; a preset PAST arrival is honored (the wait since then counts
+        toward TTFT/SLA); only an unset arrival (0.0) is stamped with the
+        submission moment."""
+        if req.arrival_s > now_s:
+            heapq.heappush(self.pending, (req.arrival_s, self._seq, req))
+            self._seq += 1
+        else:
+            if req.arrival_s <= 0.0:
+                req.arrival_s = now_s
+            self.queue.append(req)
+
+    def release(self, now_s: float) -> int:
+        """Move every pending request whose arrival time has come into the
+        admission queue (arrival order). Returns how many arrived."""
+        n = 0
+        while self.pending and self.pending[0][0] <= now_s:
+            _, _, req = heapq.heappop(self.pending)
+            self.queue.append(req)
+            n += 1
+        return n
+
+    def next_arrival_s(self) -> float | None:
+        return self.pending[0][0] if self.pending else None
 
     def next_admissible(self, now_s: float) -> Request | None:
         while self.queue:
@@ -234,19 +392,36 @@ class Scheduler:
         return [i for i, s in enumerate(self.slots) if s.free]
 
     def active_slots(self) -> list[int]:
-        return [i for i, s in enumerate(self.slots) if not s.free]
+        return [i for i, s in enumerate(self.slots) if s.request is not None]
 
-    def place(self, req: Request, slot: int, step: int) -> None:
+    def reserved_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slots) if s.reserved is not None]
+
+    def reserve(self, slot: int, req: Request, step: int) -> None:
         s = self.slots[slot]
         if not s.free:
+            raise ValueError(f"slot {slot} is not free")
+        s.reserved = req
+        self.admission_log.append({"step": step, "slot": slot, "rid": req.rid})
+        s.metrics = RequestMetrics(
+            rid=req.rid, slot=slot, prompt_len=req.prompt_len,
+            gen_len=req.gen_len, bucket=req.bucket or req.prompt_len,
+            sla_s=req.sla_s, admitted_at_step=step)
+
+    def place(self, req: Request, slot: int, step: int | None = None) -> None:
+        s = self.slots[slot]
+        if s.reserved is None and s.request is None:
+            # direct placement (no reserve phase: unit tests / legacy path)
+            self.reserve(slot, req, -1 if step is None else step)
+        elif s.reserved is not req and s.reserved is not None:
+            raise ValueError(
+                f"slot {slot} is reserved by {s.reserved.rid!r}")
+        elif s.request is not None:
             raise ValueError(
                 f"slot {slot} is occupied by {s.request.rid!r}")
         s.request = req
+        s.reserved = None
         s.served += 1
-        s.metrics = RequestMetrics(
-            rid=req.rid, slot=slot, prompt_len=req.prompt_len,
-            gen_len=req.gen_len, sla_s=req.sla_s, admitted_at_step=step)
-        self.admission_log.append({"step": step, "slot": slot, "rid": req.rid})
 
     def first_token(self, slot: int, now_s: float) -> None:
         m = self.slots[slot].metrics
@@ -258,24 +433,52 @@ class Scheduler:
 
     def slot_done(self, slot: int) -> bool:
         s = self.slots[slot]
-        return (not s.free) and s.metrics.tokens_out >= s.request.gen_len
+        return (s.request is not None
+                and s.metrics.tokens_out >= s.request.gen_len)
+
+    def attribute_step_time(self, t_step: float, prefill_tokens: int,
+                            decode_slots: list[int]) -> tuple[float, float]:
+        """Split one shared step's wall time proportionally between the
+        prefill tokens (chunk work) and decode tokens (one per active slot)
+        it processed. The decode share is credited to EVERY decoding
+        request's ``decode_s`` (wall time is shared, not divided — each
+        request waited the full decode window); the prefill share is
+        returned for the engine to credit the prefilling request(s).
+        Without this split, a long prompt's chunks would silently inflate
+        its neighbours' reported decode-t/s denominators."""
+        total = prefill_tokens + len(decode_slots)
+        if total == 0 or t_step <= 0:
+            return 0.0, 0.0
+        pre_share = t_step * prefill_tokens / total
+        dec_share = t_step - pre_share
+        for slot in decode_slots:
+            self.slots[slot].metrics.decode_s += dec_share
+        return pre_share, dec_share
+
+    def add_prefill_time(self, slot: int, seconds: float) -> None:
+        if self.slots[slot].metrics is not None:
+            self.slots[slot].metrics.prefill_s += seconds
 
     def finish(self, slot: int, now_s: float) -> RequestMetrics:
         s = self.slots[slot]
         m, req = s.metrics, s.request
         m.latency_s = max(now_s - req.arrival_s, 1e-9)
-        decode_s = max(m.latency_s - m.ttft_s, 1e-9)
-        m.decode_tokens_per_s = max(m.tokens_out - 1, 0) / decode_s
+        # decode_s is attributed per shared step (prefill chunks excluded);
+        # fall back to wall-minus-ttft when no attribution ran (unit tests)
+        decode_s = m.decode_s if m.decode_s > 0 \
+            else max(m.latency_s - m.ttft_s, 1e-9)
+        m.decode_tokens_per_s = max(m.tokens_out - 1, 0) / max(decode_s, 1e-9)
         if m.sla_s is not None:
             m.sla_met = m.latency_s <= m.sla_s
-        s.request, s.metrics = None, None
+        s.request, s.reserved, s.metrics = None, None, None
         self.finished.append(m)
         return m
 
     # -- aggregate view -------------------------------------------------------
 
     def has_work(self) -> bool:
-        return bool(self.queue) or bool(self.active_slots())
+        return (bool(self.queue) or bool(self.pending)
+                or bool(self.active_slots()) or bool(self.reserved_slots()))
 
     def sla_hit_rate(self) -> float | None:
         scored = [m for m in self.finished if m.sla_met is not None]

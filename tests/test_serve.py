@@ -139,7 +139,8 @@ def test_engine_gen_len_one_does_not_strand_the_queue():
     """Requests finishing AT admission (gen_len=1) free their slots with no
     active decode; the loop must re-enter admission, not exit early."""
     cfg = get_config("qwen1.5-0.5b").reduced()
-    eng = ServeEngine(cfg, batch=2, max_len=12)
+    # prompt 4 pads to bucket 8: size the table for bucket + gen, not prompt
+    eng = ServeEngine(cfg, batch=2, max_len=16)
     rep = eng.run(_requests(cfg, [1, 1, 1], prompt_len=4))
     assert rep["requests"] == 3
     assert rep["generated_tokens"] == 3
@@ -156,7 +157,7 @@ def test_engine_vlm_accounts_vision_prefix():
     them (not clobber them), and admission must budget for them."""
     cfg = get_config("internvl2-2b").reduced()
     assert cfg.vision_prefix > 0
-    max_len = cfg.vision_prefix + 6 + 4
+    max_len = cfg.vision_prefix + 8 + 4       # prompt 6 pads to bucket 8
     eng = ServeEngine(cfg, batch=2, max_len=max_len)
     reqs = _requests(cfg, [3, 4, 3], prompt_len=6)
     # per-request media rides along (others fall back to zero embeddings)
@@ -164,9 +165,11 @@ def test_engine_vlm_accounts_vision_prefix():
     rep = eng.run(reqs)
     assert rep["requests"] == 3
     assert rep["generated_tokens"] == 10
-    # prompt alone fits max_len, but prompt + vision prefix + gen does not
-    adm = CostModelAdmission(cfg, batch=2, max_len=max_len)
-    tight = Request(rid="t", tokens=np.zeros(7, np.int32), gen_len=4)
+    # bucket alone fits max_len, but bucket + vision prefix + gen does not
+    from repro.serve import BucketPolicy
+    adm = CostModelAdmission(cfg, batch=2, max_len=max_len,
+                             policy=BucketPolicy((8, 16), 8))
+    tight = Request(rid="t", tokens=np.zeros(9, np.int32), gen_len=4)
     ok, reason = adm.admit(tight, 0.0)
     assert not ok and "vision prefix" in reason
 
