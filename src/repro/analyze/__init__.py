@@ -1,0 +1,43 @@
+"""TSL-Check — the semantic static-analysis GPO (beyond-paper subsystem).
+
+The paper's first pipeline operator only schema-validates the UPD; TSL-Check
+is the semantic layer the paper's "valuable insights for assessing provided
+functionality" claim implies. Four analyzer families over stable ``TSL0xx``
+finding codes:
+
+* cost channel   (TSL01x) — :mod:`.cost_check`
+* coverage       (TSL02x) — :mod:`.coverage`
+* Pallas tiling  (TSL03x) — :mod:`.tiling`
+* body safety    (TSL04x) — :mod:`.safety`
+
+Entry points: ``run_analysis(corpus)`` for programmatic use, ``AnalyzeGPO``
+for pipeline insertion, ``python -m repro.core analyze`` from the CLI.
+"""
+
+from .cost_check import PRICED_PRIMITIVES, check_cost_channel
+from .coverage import availability_matrix, check_coverage
+from .findings import CODES, AnalysisReport, Code, Finding, SEVERITIES
+from .gpo import AnalyzeGPO, default_kernel_root, run_analysis
+from .render import RenderedBody, render_bodies
+from .safety import check_safety
+from .tiling import lint_kernel_file, lint_rendered_bodies
+
+__all__ = [
+    "AnalysisReport",
+    "AnalyzeGPO",
+    "CODES",
+    "Code",
+    "Finding",
+    "PRICED_PRIMITIVES",
+    "RenderedBody",
+    "SEVERITIES",
+    "availability_matrix",
+    "check_cost_channel",
+    "check_coverage",
+    "check_safety",
+    "default_kernel_root",
+    "lint_kernel_file",
+    "lint_rendered_bodies",
+    "render_bodies",
+    "run_analysis",
+]

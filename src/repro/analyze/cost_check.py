@@ -1,0 +1,155 @@
+"""Cost-channel checker (TSL01x): the UPD ``cost:`` formulas as a verified,
+falsifiable artifact.
+
+The serving scheduler (serve/scheduler.py) prices admission with
+``lib.cost(primitive, term, **shapes)`` — a bare ``eval`` of UPD-provided
+strings. This analyzer makes every failure mode of that channel a *static*
+finding instead of a runtime surprise:
+
+* the formula must parse (TSL010);
+* it may only use names, numeric literals and arithmetic — no calls,
+  attributes, subscripts or comparisons, so the generated ``cost()`` eval can
+  never execute anything but arithmetic (TSL011);
+* every free symbol must be bound by the primitive's declared ``cost_shapes``
+  vocabulary — the keyword set callers are expected to pass (TSL012; a
+  cost-carrying primitive without the declaration gets TSL013);
+* the four primitives the serving scheduler prices must land BOTH a ``flops``
+  and a ``bytes`` term in the generated ``_cost.py`` of every target, for
+  every candidate bench selection could pick (TSL014).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from repro.core import select
+from .findings import AnalysisReport
+
+# primitives whose cost terms serve/scheduler.py consumes for admission;
+# every servable target's generated package must price all of them
+PRICED_PRIMITIVES: dict[str, tuple[str, ...]] = {
+    "attention_decode": ("flops", "bytes"),
+    "attention_prefill_chunk": ("flops", "bytes"),
+    "ssd_scan": ("flops", "bytes"),
+    "wkv6_scan": ("flops", "bytes"),
+}
+
+_ALLOWED_BINOPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv,
+                   ast.Mod, ast.Pow)
+_ALLOWED_UNARY = (ast.USub, ast.UAdd)
+
+
+def formula_symbols(expr: str) -> set[str]:
+    """Free symbols of a (already parse-checked) cost formula."""
+    return {n.id for n in ast.walk(ast.parse(expr, mode="eval"))
+            if isinstance(n, ast.Name)}
+
+
+def check_formula(expr: str) -> tuple[str | None, str]:
+    """Validate one formula. Returns (code, detail) or (None, "") if clean."""
+    try:
+        tree = ast.parse(expr, mode="eval")
+    except SyntaxError as e:
+        return "TSL010", f"{expr!r}: {e.msg}"
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.Expression, ast.Constant, ast.Name,
+                             ast.Load)):
+            if isinstance(node, ast.Constant) and not isinstance(
+                    node.value, (int, float)):
+                return "TSL011", (f"{expr!r}: literal {node.value!r} is not "
+                                  "numeric")
+            continue
+        if isinstance(node, ast.BinOp) and isinstance(node.op, _ALLOWED_BINOPS):
+            continue
+        if isinstance(node, ast.UnaryOp) and isinstance(node.op, _ALLOWED_UNARY):
+            continue
+        if isinstance(node, (*_ALLOWED_BINOPS, *_ALLOWED_UNARY)):
+            continue
+        return "TSL011", (f"{expr!r}: {type(node).__name__} is outside the "
+                          "arithmetic whitelist")
+    return None, ""
+
+
+def _priced_term_gap(prim, target, hw: frozenset[str],
+                     required: tuple[str, ...]) -> str | None:
+    """Why (if at all) the required terms are NOT guaranteed to land in the
+    generated ``_cost.py`` for (primitive, target).
+
+    generate.py records the cost dict of the *selected* impl of the first
+    ctype whose selection carries any cost; with a ``bench:`` block, bench
+    selection may pick ANY valid candidate. The static guarantee therefore
+    is: every selectable candidate carries all required terms (then whichever
+    wins, the full term set lands), and at least one ctype is selectable."""
+    pools: list[list] = []
+    for ctype in target.ctypes:
+        cands = select.valid_candidates(prim, target.name, ctype, hw)
+        if not cands:
+            continue
+        if prim.bench is not None:
+            pools.append(cands)
+        else:
+            chosen = select.choose(prim, target.name, ctype, hw)
+            pools.append([chosen.impl] if chosen else [])
+    selectable = [impl for pool in pools for impl in pool]
+    if not selectable:
+        return "no selectable definition at all"
+    for impl in selectable:
+        missing = [t for t in required if t not in impl.cost]
+        if missing:
+            i = prim.definitions.index(impl)
+            return (f"def[{i}] is selectable but lacks terms {missing}")
+    return None
+
+
+def check_cost_channel(corpus) -> AnalysisReport:
+    """Run the full TSL01x family over a validated corpus (CorpusBuild or
+    CorpusIR — anything with typed ``targets``/``primitives`` mappings)."""
+    rep = AnalysisReport()
+    for name in sorted(corpus.primitives):
+        prim = corpus.primitives[name]
+        subject = f"primitive:{name}"
+        declared = set(getattr(prim, "cost_shapes", ()) or ())
+        has_cost = any(d.cost for d in prim.definitions)
+        if has_cost and not declared:
+            rep.add("TSL013",
+                    "declare cost_shapes: [..] naming the shape keywords "
+                    "these formulas expect",
+                    subject=subject)
+        if prim.bench is not None and not has_cost:
+            rep.add("TSL015",
+                    "bench: setup present but no definition carries cost "
+                    "formulas",
+                    subject=subject)
+        for i, d in enumerate(prim.definitions):
+            for term, expr in sorted(d.cost.items()):
+                code, detail = check_formula(str(expr))
+                if code:
+                    rep.add(code, detail, subject=subject,
+                            location=f"def[{i}] {term}")
+                    continue
+                if declared:
+                    unbound = formula_symbols(str(expr)) - declared
+                    if unbound:
+                        rep.add("TSL012",
+                                f"{expr!r}: {sorted(unbound)} not in "
+                                f"cost_shapes {sorted(declared)}",
+                                subject=subject,
+                                location=f"def[{i}] {term}")
+
+    # priced primitives: both terms must land for every servable target
+    for pname, required in PRICED_PRIMITIVES.items():
+        prim = corpus.primitives.get(pname)
+        if prim is None:
+            continue        # slim corpora without serving are legitimate
+        for tname in sorted(corpus.targets):
+            tgt = corpus.targets[tname]
+            hw = frozenset(tgt.flags)
+            gap = _priced_term_gap(prim, tgt, hw, required)
+            if gap is not None:
+                rep.add("TSL014",
+                        f"{gap} — terms {list(required)} not guaranteed in "
+                        f"the generated _cost.py for target {tname!r} "
+                        "(serving admission would hit the analytic fallback)",
+                        subject=f"primitive:{pname}",
+                        location=f"target:{tname}")
+    return rep

@@ -1,0 +1,113 @@
+"""Coverage-matrix insight analyzer (TSL02x).
+
+Materializes the primitive × target × ctype availability matrix the paper's
+"valuable insights for assessing provided functionality" claim implies, and
+turns its asymmetries into coded findings:
+
+* a primitive covered by some targets but not others (TSL020) — a library
+  generated for an uncovered target silently omits the op;
+* definitions with no ``testing:`` entry (TSL021, the coded version of the
+  paper-§4.1 warning ValidateGPO already emits);
+* definitions gated on feature flags that *no* SRU document declares —
+  hwprobe reads flags from the SRU documents, so such a definition can never
+  become valid (TSL022);
+* dead candidates: definitions that on every (target, ctype) either lose the
+  flag heuristic with no ``bench:`` setup to overrule it, or are invalid
+  outright (TSL023);
+* definition ctypes the target SRU does not offer (TSL024).
+"""
+
+from __future__ import annotations
+
+from repro.core import select
+from .findings import AnalysisReport
+
+
+def availability_matrix(corpus) -> dict[str, dict[str, list[str]]]:
+    """primitive -> target -> [ctypes with a valid selection]."""
+    matrix: dict[str, dict[str, list[str]]] = {}
+    for name in sorted(corpus.primitives):
+        prim = corpus.primitives[name]
+        row: dict[str, list[str]] = {}
+        for tname in sorted(corpus.targets):
+            tgt = corpus.targets[tname]
+            hw = frozenset(tgt.flags)
+            cts = [ct for ct in tgt.ctypes
+                   if select.valid_candidates(prim, tname, ct, hw)]
+            if cts:
+                row[tname] = cts
+        matrix[name] = row
+    return matrix
+
+
+def check_coverage(corpus) -> AnalysisReport:
+    rep = AnalysisReport()
+    all_targets = set(corpus.targets)
+    declared_flags: set[str] = set()
+    for tgt in corpus.targets.values():
+        declared_flags |= set(tgt.flags)
+
+    matrix = availability_matrix(corpus)
+    for name in sorted(corpus.primitives):
+        prim = corpus.primitives[name]
+        subject = f"primitive:{name}"
+        covered = set(matrix[name])
+
+        if covered and covered != all_targets:
+            rep.add("TSL020",
+                    f"generatable for {sorted(covered)} but not "
+                    f"{sorted(all_targets - covered)}",
+                    subject=subject)
+
+        if not prim.tests:
+            rep.add("TSL021", "no testing: entries — the generated library "
+                    "ships this primitive ungated", subject=subject)
+
+        # flags hwprobe can never produce
+        for i, d in enumerate(prim.definitions):
+            unknown = set(d.flags) - declared_flags
+            if unknown:
+                rep.add("TSL022",
+                        f"requires {sorted(unknown)}, declared by no SRU "
+                        "document — dead on every probe result",
+                        subject=subject, location=f"def[{i}]")
+
+        # dead candidates: never selectable on any (target, ctype)
+        reachable: set[int] = set()
+        for tname in sorted(corpus.targets):
+            tgt = corpus.targets[tname]
+            hw = frozenset(tgt.flags)
+            for ct in tgt.ctypes:
+                cands = select.valid_candidates(prim, tname, ct, hw)
+                if not cands:
+                    continue
+                if prim.bench is not None:
+                    reachable.update(prim.definitions.index(c) for c in cands)
+                else:
+                    chosen = select.choose(prim, tname, ct, hw)
+                    if chosen is not None:
+                        reachable.add(prim.definitions.index(chosen.impl))
+        for i, d in enumerate(prim.definitions):
+            if i in reachable:
+                continue
+            if set(d.flags) - declared_flags:
+                continue        # already TSL022 — don't double-report
+            why = ("no bench: setup to overrule the flag heuristic"
+                   if prim.bench is None else "never a valid candidate")
+            rep.add("TSL023",
+                    f"definition for {d.target_extension!r} is never "
+                    f"selected on any (target, ctype); {why}",
+                    subject=subject, location=f"def[{i}]")
+
+        # ctype not offered by the definition's target
+        for i, d in enumerate(prim.definitions):
+            tgt = corpus.targets.get(d.target_extension)
+            if tgt is None:
+                continue        # unknown target is a validation error already
+            extra = [ct for ct in d.ctypes if ct not in tgt.ctypes]
+            if extra:
+                rep.add("TSL024",
+                        f"ctypes {extra} not offered by target "
+                        f"{d.target_extension!r}",
+                        subject=subject, location=f"def[{i}]")
+    return rep

@@ -1,0 +1,279 @@
+"""Finding model + stable code registry for TSL-Check (the semantic
+static-analysis GPO).
+
+The paper claims the generator "exposes valuable insights for assessing
+provided functionality"; ``ValidateGPO`` only schema-checks. TSL-Check is the
+semantic layer on top: every rule has a stable ``TSL0xx`` code, a fixed
+severity, and a one-line rationale, so findings are machine-diffable across
+PRs (CI uploads the JSON report) and suppressible per UPD document.
+
+Code space (documented for users in ``tsl_data/README.md``):
+
+* ``TSL00x`` — corpus plumbing (schema errors surfaced through analysis)
+* ``TSL01x`` — cost channel (formulas the serving scheduler prices with)
+* ``TSL02x`` — coverage matrix (primitive × target × ctype insights)
+* ``TSL03x`` — Pallas tiling (BlockSpec/grid geometry vs the target SRU)
+* ``TSL04x`` — implementation-body safety (UPD code that is exec'd/traced)
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, replace
+
+SEVERITIES = ("error", "warn", "info")
+
+
+@dataclass(frozen=True)
+class Code:
+    code: str
+    severity: str            # "error" | "warn" | "info"
+    title: str
+    rationale: str
+
+
+_CODE_LIST = (
+    # -- corpus plumbing ----------------------------------------------------
+    Code("TSL001", "error", "corpus validation error",
+         "The UPD failed schema validation; analysis ran on the surviving "
+         "documents only."),
+    Code("TSL002", "info", "corpus validation warning",
+         "ValidateGPO emitted a warning for this document."),
+    # -- cost channel -------------------------------------------------------
+    Code("TSL010", "error", "cost formula does not parse",
+         "The serving scheduler eval()s this formula for admission; a syntax "
+         "error becomes a runtime crash in the serving path."),
+    Code("TSL011", "error", "cost formula uses a non-whitelisted construct",
+         "Cost formulas are restricted to names, numeric literals and "
+         "arithmetic (+ - * / // % ** and unary minus); calls, attributes, "
+         "subscripts or comparisons would execute arbitrary code inside the "
+         "generated library's cost() eval."),
+    Code("TSL012", "error", "cost formula references an undeclared shape symbol",
+         "Every free symbol must appear in the primitive's cost_shapes "
+         "declaration; an unbound symbol raises NameError the first time the "
+         "scheduler prices this primitive."),
+    Code("TSL013", "warn", "cost formulas present but no cost_shapes declared",
+         "Without a cost_shapes declaration the symbol-binding check cannot "
+         "run; callers can only discover the expected shape keywords by "
+         "reading the formula."),
+    Code("TSL014", "error", "priced primitive missing flops/bytes cost term",
+         "The serving scheduler prices admission with this primitive's "
+         "flops+bytes terms; a missing term silently falls back to an "
+         "analytic guess at runtime (serve/scheduler.py logs this code)."),
+    Code("TSL015", "info", "benchmarked primitive carries no cost metadata",
+         "bench-selection measures this primitive but no cost formula is "
+         "recorded, so rooflines cannot cross-check measured vs predicted."),
+    # -- coverage matrix ----------------------------------------------------
+    Code("TSL020", "info", "asymmetric target coverage",
+         "The primitive is generatable for some targets but not others; a "
+         "library generated for an uncovered target silently omits it."),
+    Code("TSL021", "warn", "primitive has no test cases",
+         "Paper §4.1: untested primitives ship ungated; every definition "
+         "should carry at least one co-located test."),
+    Code("TSL022", "warn", "definition requires flags no target provides",
+         "hwprobe can only ever produce flags declared by some SRU document; "
+         "a definition gated on an unknown flag is dead code in every "
+         "generated library."),
+    Code("TSL023", "warn", "definition is never selectable (dead candidate)",
+         "On every (target, ctype) either the flag heuristic picks another "
+         "definition and no bench: setup exists to overrule it, or the "
+         "definition is invalid — it can never appear in a generated "
+         "library."),
+    Code("TSL024", "warn", "definition ctype not offered by its target",
+         "The target SRU does not list this element type, so the "
+         "specialization is unreachable through dispatch."),
+    # -- Pallas tiling ------------------------------------------------------
+    Code("TSL030", "warn", "BlockSpec block shape misaligned to target tiling",
+         "Constant block dims should be multiples of the SRU's (sublanes, "
+         "lanes) vector-register geometry; misaligned tiles force Mosaic "
+         "relayouts or fail to lower on real TPUs."),
+    Code("TSL031", "warn", "unguarded grid remainder (floor division)",
+         "A grid computed with // silently drops the remainder rows unless "
+         "the module also guards (x % b) or uses a ceil-div; pad the input "
+         "or guard the divisibility."),
+    Code("TSL032", "warn", "reduction may accumulate below float32",
+         "dot/dot_general/einsum without preferred_element_type= accumulates "
+         "in the input dtype — bf16 MXU accumulation loses ~8 bits per "
+         "256-term sum."),
+    # -- implementation-body safety -----------------------------------------
+    Code("TSL040", "error", "implementation body fails to render or parse",
+         "Definition bodies are stage-1 Jinja templates that must render to "
+         "valid Python; this one would break generation for its target."),
+    Code("TSL041", "error", "host numpy (np.) used in a traced body",
+         "Implementation bodies run under jit; np.* calls either fail to "
+         "trace or silently fall back to host execution — use jnp."),
+    Code("TSL042", "error", "I/O or host side effect in a traced body",
+         "print/open/os/sys/subprocess inside a generated implementation "
+         "executes at trace time (at best once, at worst never) and makes "
+         "the artifact non-reproducible."),
+    Code("TSL043", "error", "host callback primitive in a traced body",
+         "pure_callback/io_callback/debug.callback punch through the "
+         "compiled graph; the generated TSL must stay device-only."),
+    Code("TSL044", "error", "nondeterminism in a traced body",
+         "time.*/random.*/np.random.* make regeneration non-reproducible "
+         "and break the content-addressed artifact cache contract."),
+)
+
+CODES: dict[str, Code] = {c.code: c for c in _CODE_LIST}
+
+
+@dataclass(frozen=True)
+class Finding:
+    """One analyzer finding, attributable to a stable ``TSL0xx`` code.
+
+    ``subject`` is a stable coordinate (``primitive:name``, ``target:name`` or
+    ``file:relpath``); ``location`` is a human refinement (``def[2]``,
+    ``line 57``) that deliberately does NOT participate in baseline identity,
+    so unrelated edits shifting a line never churn the baseline.
+    """
+
+    code: str
+    message: str
+    subject: str = ""
+    location: str = ""
+    suppressed: bool = False      # per-document lint: {suppress: [...]} hit
+    baselined: bool = False       # accepted via --baseline file
+
+    @property
+    def severity(self) -> str:
+        return CODES[self.code].severity
+
+    @property
+    def active(self) -> bool:
+        return not (self.suppressed or self.baselined)
+
+    def identity(self) -> str:
+        return f"{self.code} {self.subject}"
+
+    def render(self) -> str:
+        loc = f" ({self.location})" if self.location else ""
+        tag = " [suppressed]" if self.suppressed else (
+            " [baselined]" if self.baselined else "")
+        return f"{self.code} {self.severity}: {self.subject}{loc}: {self.message}{tag}"
+
+
+class AnalysisReport:
+    """Aggregated findings + rendering (docgen-style markdown, JSON, text)."""
+
+    def __init__(self, findings: list[Finding] | None = None):
+        self.findings: list[Finding] = list(findings or [])
+
+    def add(self, code: str, message: str, *, subject: str = "",
+            location: str = "") -> None:
+        if code not in CODES:
+            raise KeyError(f"unknown finding code {code!r}")
+        self.findings.append(Finding(code=code, message=message,
+                                     subject=subject, location=location))
+
+    def extend(self, other: "AnalysisReport") -> None:
+        self.findings.extend(other.findings)
+
+    # -- suppression / baseline --------------------------------------------
+
+    def apply_suppressions(self, suppressed_for) -> None:
+        """``suppressed_for(finding) -> bool`` marks per-document
+        ``lint: {suppress: [...]}`` hits (kept in the report, not counted)."""
+        self.findings = [
+            replace(f, suppressed=True) if (not f.suppressed and suppressed_for(f))
+            else f
+            for f in self.findings
+        ]
+
+    def apply_baseline(self, identities: set[str]) -> None:
+        self.findings = [
+            replace(f, baselined=True)
+            if (f.active and f.identity() in identities) else f
+            for f in self.findings
+        ]
+
+    # -- aggregation ---------------------------------------------------------
+
+    def active_findings(self) -> list[Finding]:
+        return [f for f in self.findings if f.active]
+
+    def counts(self) -> dict[str, int]:
+        out = {s: 0 for s in SEVERITIES}
+        for f in self.active_findings():
+            out[f.severity] += 1
+        out["suppressed"] = sum(f.suppressed for f in self.findings)
+        out["baselined"] = sum(f.baselined for f in self.findings)
+        return out
+
+    def codes(self) -> set[str]:
+        return {f.code for f in self.active_findings()}
+
+    def exit_code(self, fail_on: str = "error") -> int:
+        """0 unless an active finding is at/above the ``fail_on`` severity."""
+        if fail_on == "never":
+            return 0
+        gate = {"error": ("error",), "warn": ("error", "warn"),
+                "info": SEVERITIES}[fail_on]
+        return 1 if any(f.severity in gate for f in self.active_findings()) else 0
+
+    def sorted_findings(self) -> list[Finding]:
+        rank = {s: i for i, s in enumerate(SEVERITIES)}
+        return sorted(self.findings,
+                      key=lambda f: (rank[f.severity], f.code, f.subject,
+                                     f.location))
+
+    # -- rendering -----------------------------------------------------------
+
+    def to_json(self) -> dict:
+        return {
+            "counts": self.counts(),
+            "findings": [
+                {
+                    "code": f.code,
+                    "severity": f.severity,
+                    "subject": f.subject,
+                    "location": f.location,
+                    "message": f.message,
+                    "suppressed": f.suppressed,
+                    "baselined": f.baselined,
+                }
+                for f in self.sorted_findings()
+            ],
+        }
+
+    def to_json_str(self) -> str:
+        return json.dumps(self.to_json(), indent=1)
+
+    def to_markdown(self) -> str:
+        counts = self.counts()
+        lines = [
+            "# TSL-Check findings",
+            "",
+            f"**{counts['error']} error(s), {counts['warn']} warning(s), "
+            f"{counts['info']} info** "
+            f"({counts['suppressed']} suppressed, {counts['baselined']} baselined)",
+            "",
+        ]
+        by_code: dict[str, list[Finding]] = {}
+        for f in self.sorted_findings():
+            by_code.setdefault(f.code, []).append(f)
+        for code in sorted(by_code):
+            meta = CODES[code]
+            lines += [f"## `{code}` — {meta.title} ({meta.severity})", "",
+                      meta.rationale, "",
+                      "| subject | location | message | state |",
+                      "|---|---|---|---|"]
+            for f in by_code[code]:
+                state = ("suppressed" if f.suppressed
+                         else "baselined" if f.baselined else "active")
+                lines.append(
+                    f"| {f.subject} | {f.location or '—'} | {f.message} | {state} |")
+            lines.append("")
+        if not by_code:
+            lines.append("No findings — the corpus lints clean.")
+        return "\n".join(lines)
+
+    def to_text(self) -> str:
+        out = [f.render() for f in self.sorted_findings()]
+        c = self.counts()
+        out.append(
+            f"{c['error']} error(s), {c['warn']} warning(s), {c['info']} info, "
+            f"{c['suppressed']} suppressed, {c['baselined']} baselined")
+        return "\n".join(out)
+
+
+__all__ = ["AnalysisReport", "CODES", "Code", "Finding", "SEVERITIES"]

@@ -1,0 +1,136 @@
+"""TSL-Check orchestration: ``run_analysis`` + the ``AnalyzeGPO`` pipeline
+operator.
+
+``run_analysis(corpus)`` runs every analyzer family over a validated corpus
+(plus the repo's Pallas kernel modules) and applies the per-document
+``lint: {suppress: [TSLxxx, ...]}`` suppressions declared in the UPD.
+
+``AnalyzeGPO`` packages the same pass as a corpus-phase GPO so users can
+extend the pipeline (paper §3.2 "new GPOs can be added with ease")::
+
+    pipe = CorpusPipeline()
+    pipe.insert_after("validate", AnalyzeGPO(fail_on="error"))
+    corpus = pipe.build()
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from .cost_check import check_cost_channel
+from .coverage import check_coverage
+from .findings import AnalysisReport, Finding
+from .render import render_bodies
+from .safety import check_safety
+from .tiling import lint_kernel_file, lint_rendered_bodies
+
+_DEF_LOC = re.compile(r"def\[(\d+)\]")
+
+
+def default_kernel_root() -> Path:
+    import repro.kernels
+
+    return Path(repro.kernels.__file__).resolve().parent
+
+
+def _kernel_geometry(corpus) -> tuple[int, int]:
+    """(sublanes, lanes) to lint repo kernels against: the tightest geometry
+    among TPU-ish targets, falling back to the schema defaults."""
+    geoms = [(t.sublanes, t.lanes) for t in corpus.targets.values()
+             if "tpu" in t.flags]
+    return max(geoms) if geoms else (8, 128)
+
+
+def _suppressor(corpus):
+    """Build ``suppressed_for(finding) -> bool`` from UPD ``lint:`` blocks."""
+    prim_sup: dict[str, set[str]] = {}
+    def_sup: dict[tuple[str, int], set[str]] = {}
+    for name, prim in corpus.primitives.items():
+        codes = set((prim.lint or {}).get("suppress", ()))
+        if codes:
+            prim_sup[name] = codes
+        for i, d in enumerate(prim.definitions):
+            dcodes = set((d.lint or {}).get("suppress", ()))
+            if dcodes:
+                def_sup[(name, i)] = dcodes
+
+    def suppressed(f: Finding) -> bool:
+        if not f.subject.startswith("primitive:"):
+            return False
+        pname = f.subject.split(":", 1)[1]
+        if f.code in prim_sup.get(pname, ()):
+            return True
+        m = _DEF_LOC.match(f.location)
+        if m and f.code in def_sup.get((pname, int(m.group(1))), ()):
+            return True
+        return False
+
+    return suppressed
+
+
+def run_analysis(corpus, *, kernel_roots: tuple[Path, ...] | None = None,
+                 include_corpus_warnings: bool = True) -> AnalysisReport:
+    """Run every TSL-Check analyzer family over a validated corpus."""
+    rep = AnalysisReport()
+    if include_corpus_warnings:
+        for w in corpus.warnings:
+            rep.add("TSL002", w, subject="corpus")
+
+    rep.extend(check_cost_channel(corpus))
+    rep.extend(check_coverage(corpus))
+
+    bodies = render_bodies(corpus)
+    for rb in bodies:
+        if rb.error:
+            rep.add("TSL040", rb.error, subject=f"primitive:{rb.primitive}",
+                    location=f"def[{rb.def_index}] {rb.target}")
+    ok = [rb for rb in bodies if not rb.error]
+    rep.extend(check_safety(ok))
+    rep.extend(lint_rendered_bodies(ok))
+
+    if kernel_roots is None:
+        kernel_roots = (default_kernel_root(),)
+    sublanes, lanes = _kernel_geometry(corpus)
+    for root in kernel_roots:
+        root = Path(root)
+        if not root.exists():
+            continue
+        for path in sorted(root.rglob("kernel.py")):
+            rep.extend(lint_kernel_file(path, sublanes=sublanes, lanes=lanes,
+                                        root=root.parent))
+
+    rep.apply_suppressions(_suppressor(corpus))
+    return rep
+
+
+class AnalyzeGPO:
+    """Corpus-phase GPO: semantic analysis after validation.
+
+    Findings at/above ``fail_on`` become pipeline errors (aborting a strict
+    build); everything else lands as warnings prefixed with its TSL code.
+    The full report is kept on ``self.report`` for programmatic access.
+    """
+
+    name = "analyze"
+
+    def __init__(self, fail_on: str = "error",
+                 kernel_roots: tuple[Path, ...] | None = None):
+        self.fail_on = fail_on
+        self.kernel_roots = kernel_roots
+        self.report: AnalysisReport | None = None
+
+    def run(self, ctx):
+        corpus = ctx.freeze()
+        rep = run_analysis(corpus, kernel_roots=self.kernel_roots,
+                           include_corpus_warnings=False)
+        self.report = rep
+        gate = {"never": (), "error": ("error",),
+                "warn": ("error", "warn"),
+                "info": ("error", "warn", "info")}[self.fail_on]
+        for f in rep.active_findings():
+            if f.severity in gate:
+                ctx.fail(f.render())
+            else:
+                ctx.warn(f.render())
+        return ctx

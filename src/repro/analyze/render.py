@@ -1,0 +1,86 @@
+"""Stage-1 rendering of UPD definition bodies for analysis (TSL03x/TSL04x).
+
+Definition bodies are Jinja2 stage-1 templates (paper §3.2 ③); the tiling and
+safety analyzers need the *rendered* Python the generator would actually emit.
+Each definition is rendered once against its own target SRU and a
+representative ctype, with the implementation wrapped as a function body so
+``return`` statements parse::
+
+    <helpers module-level code>
+    def _impl(<params>):
+        <implementation body>
+
+Render or parse failures become TSL040 upstream (``error`` on the
+:class:`RenderedBody`) instead of crashing the analysis pass.
+"""
+
+from __future__ import annotations
+
+import ast
+import textwrap
+from dataclasses import dataclass
+
+from repro.core import engine
+
+
+@dataclass(frozen=True)
+class RenderedBody:
+    primitive: str
+    def_index: int
+    target: str
+    ctype: str
+    sublanes: int
+    lanes: int
+    source: str                 # helpers + wrapped implementation (a module)
+    tree: ast.Module | None
+    error: str = ""
+
+
+def _pick_ctype(impl, target) -> str | None:
+    """A representative ctype the engine can render dtype helpers for."""
+    for ct in impl.ctypes:
+        try:
+            engine.dtype_info(ct)
+        except KeyError:
+            continue
+        return ct
+    return None
+
+
+def render_bodies(corpus) -> list[RenderedBody]:
+    out: list[RenderedBody] = []
+    for name in sorted(corpus.primitives):
+        prim = corpus.primitives[name]
+        for i, d in enumerate(prim.definitions):
+            tgt = corpus.targets.get(d.target_extension)
+            if tgt is None:
+                continue    # unknown target: already a validation error
+            ct = _pick_ctype(d, tgt)
+            if ct is None:
+                continue    # no renderable dtype — nothing to analyze
+            try:
+                helpers = engine.render_stage1(
+                    d.helpers, sru=tgt.as_render_dict(), ctype=ct,
+                    primitive=name, params=prim.arg_names()) if d.helpers else ""
+                body = engine.render_stage1(
+                    d.implementation, sru=tgt.as_render_dict(), ctype=ct,
+                    primitive=name, params=prim.arg_names())
+            except Exception as e:  # jinja2 errors are library-specific
+                out.append(RenderedBody(name, i, tgt.name, ct, tgt.sublanes,
+                                        tgt.lanes, "", None,
+                                        error=f"stage-1 render failed: {e}"))
+                continue
+            sig = ", ".join(prim.arg_names()) or ""
+            src = (f"{helpers}\n\ndef _impl({sig}):\n"
+                   + textwrap.indent(body or "pass", "    ") + "\n")
+            try:
+                tree = ast.parse(src)
+            except SyntaxError as e:
+                out.append(RenderedBody(name, i, tgt.name, ct, tgt.sublanes,
+                                        tgt.lanes, src, None,
+                                        error=f"rendered body does not parse: "
+                                              f"{e.msg} (line {e.lineno})"))
+                continue
+            out.append(RenderedBody(name, i, tgt.name, ct, tgt.sublanes,
+                                    tgt.lanes, src, tree))
+    return out

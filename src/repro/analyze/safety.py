@@ -1,0 +1,105 @@
+"""Implementation-body safety lint (TSL04x).
+
+UPD ``implementation:``/``helpers:`` blocks are exec'd into the generated
+library and traced under ``jit`` — they must be pure device code. This
+analyzer walks the stage-1-rendered bodies (see :mod:`.render`) and forbids:
+
+* **TSL041** — host numpy (``np.``/``numpy.``) inside a *function* body.
+  Module-level numpy in ``helpers:`` (host constant tables built once at
+  import) is legitimate; inside a traced function it either fails to trace
+  or silently falls back to host execution.
+* **TSL042** — I/O and host side effects: ``print``/``open``/``input`` calls,
+  ``os``/``sys``/``subprocess`` usage anywhere in the body.
+* **TSL043** — host callback primitives (``pure_callback``, ``io_callback``,
+  ``debug.callback``) — the generated TSL must stay device-only.
+* **TSL044** — nondeterminism: ``time.*``, ``random.*``, ``np.random.*``.
+  (``jax.random`` with explicit keys is deterministic and exempt.)
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .findings import AnalysisReport
+from .render import RenderedBody
+
+_NUMPY_NAMES = {"np", "numpy"}
+_IO_CALLS = {"print", "open", "input"}
+_IO_MODULES = {"os", "sys", "subprocess", "shutil", "socket"}
+_CALLBACKS = {"pure_callback", "io_callback"}
+_NONDET_MODULES = {"time", "random"}
+
+
+def _in_function(tree: ast.Module) -> set[int]:
+    """ids of every node nested inside some function definition."""
+    inside: set[int] = set()
+    for fn in ast.walk(tree):
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            for sub in ast.walk(fn):
+                if sub is not fn:
+                    inside.add(id(sub))
+    return inside
+
+
+def check_body(rb: RenderedBody) -> AnalysisReport:
+    rep = AnalysisReport()
+    subject = f"primitive:{rb.primitive}"
+
+    def loc(node: ast.AST) -> str:
+        return f"def[{rb.def_index}] {rb.target} line {node.lineno}"
+
+    tree = rb.tree
+    assert tree is not None
+    inside = _in_function(tree)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load):
+            if node.id in _NUMPY_NAMES and id(node) in inside:
+                rep.add("TSL041",
+                        f"host numpy ({node.id}.*) in a traced function — "
+                        "use jnp",
+                        subject=subject, location=loc(node))
+            elif node.id in _IO_MODULES:
+                rep.add("TSL042", f"host module {node.id!r} used",
+                        subject=subject, location=loc(node))
+            elif node.id in _NONDET_MODULES:
+                rep.add("TSL044", f"nondeterministic module {node.id!r} used",
+                        subject=subject, location=loc(node))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Name) and f.id in _IO_CALLS:
+                rep.add("TSL042", f"{f.id}() call in an implementation body",
+                        subject=subject, location=loc(node))
+        elif isinstance(node, ast.Attribute):
+            if node.attr in _CALLBACKS:
+                rep.add("TSL043", f"{node.attr} punches through the compiled "
+                        "graph", subject=subject, location=loc(node))
+            elif node.attr == "callback" and isinstance(
+                    node.value, (ast.Name, ast.Attribute)) and (
+                    (isinstance(node.value, ast.Name)
+                     and node.value.id == "debug")
+                    or (isinstance(node.value, ast.Attribute)
+                        and node.value.attr == "debug")):
+                rep.add("TSL043", "debug.callback punches through the "
+                        "compiled graph", subject=subject, location=loc(node))
+            elif node.attr == "random" and isinstance(node.value, ast.Name) \
+                    and node.value.id in _NUMPY_NAMES:
+                rep.add("TSL044", f"{node.value.id}.random is host-side "
+                        "nondeterminism", subject=subject, location=loc(node))
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            mod = getattr(node, "module", "") or ""
+            names = {a.name.split(".")[0] for a in node.names} | \
+                {mod.split(".")[0]}
+            hit = names & (_IO_MODULES | _NONDET_MODULES)
+            if hit and id(node) in inside:
+                code = ("TSL042" if hit & _IO_MODULES else "TSL044")
+                rep.add(code, f"import of {sorted(hit)} inside a traced "
+                        "function", subject=subject, location=loc(node))
+    return rep
+
+
+def check_safety(bodies: list[RenderedBody]) -> AnalysisReport:
+    rep = AnalysisReport()
+    for rb in bodies:
+        if rb.tree is not None:
+            rep.extend(check_body(rb))
+    return rep

@@ -1,0 +1,232 @@
+"""Pallas tiling lint (TSL03x): BlockSpec/grid geometry vs the target SRU.
+
+The kernels hard-code tile shapes; the SRUs declare the hardware geometry
+(``sublanes`` × ``lanes`` VREG tiling, MXU shape) — and nothing compared the
+two until now. This analyzer AST-walks kernel modules (``kernels/**/kernel.py``
+and stage-1-rendered UPD pallas bodies) and checks:
+
+* **TSL030** — constant ``pl.BlockSpec`` block dims must align to the target
+  tiling: last dim a multiple of ``lanes``, second-to-last a multiple of
+  ``sublanes``. Dims of 1 are broadcast/scalar blocks and exempt; symbolic
+  dims are resolved by constant propagation over module constants, integer
+  keyword defaults and simple assignments — what cannot be resolved is not
+  guessed at.
+* **TSL031** — a ``grid`` computed with floor division (``x // b``) silently
+  drops remainder rows unless the module also guards divisibility: any
+  ``x % b`` over the same operand pair (asserts count) or a ceil-div. The
+  guard search is module-wide because kernels commonly assert in a sibling
+  prep function.
+* **TSL032** — ``dot``/``dot_general`` without ``preferred_element_type``
+  accumulates in the input dtype; bf16 MXU accumulation loses ~8 bits per
+  256-term sum. (``jnp.einsum`` gets the same check via its
+  ``preferred_element_type`` keyword.)
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+
+from .findings import AnalysisReport
+from .render import RenderedBody
+
+_DOT_FUNCS = {"dot", "dot_general", "einsum"}
+
+
+# -- constant propagation -----------------------------------------------------
+
+def _const_eval(node: ast.expr, env: dict[str, int]) -> int | None:
+    """Evaluate an int-valued expression over known constants, or None."""
+    if isinstance(node, ast.Constant):
+        return node.value if isinstance(node.value, int) and not isinstance(
+            node.value, bool) else None
+    if isinstance(node, ast.Name):
+        return env.get(node.id)
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        v = _const_eval(node.operand, env)
+        return -v if v is not None else None
+    if isinstance(node, ast.BinOp):
+        lo = _const_eval(node.left, env)
+        ro = _const_eval(node.right, env)
+        if lo is None or ro is None:
+            return None
+        try:
+            if isinstance(node.op, ast.Add):
+                return lo + ro
+            if isinstance(node.op, ast.Sub):
+                return lo - ro
+            if isinstance(node.op, ast.Mult):
+                return lo * ro
+            if isinstance(node.op, ast.FloorDiv):
+                return lo // ro
+            if isinstance(node.op, ast.Mod):
+                return lo % ro
+        except (ZeroDivisionError, ValueError):
+            return None
+    return None
+
+
+def _assign_env(body: list[ast.stmt], env: dict[str, int]) -> dict[str, int]:
+    """Fold simple ``NAME = <const expr>`` assignments into ``env``."""
+    env = dict(env)
+    for stmt in body:
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)):
+            v = _const_eval(stmt.value, env)
+            if v is not None:
+                env[stmt.targets[0].id] = v
+    return env
+
+
+def _function_env(fn: ast.FunctionDef, module_env: dict[str, int]
+                  ) -> dict[str, int]:
+    env = dict(module_env)
+    args = fn.args
+    # integer keyword defaults bind their parameter name (callers usually
+    # keep the default; a smaller runtime value only tightens alignment)
+    pos = args.posonlyargs + args.args
+    for a, dflt in zip(pos[len(pos) - len(args.defaults):], args.defaults):
+        v = _const_eval(dflt, {})
+        if v is not None:
+            env[a.arg] = v
+    for a, dflt in zip(args.kwonlyargs, args.kw_defaults):
+        if dflt is not None:
+            v = _const_eval(dflt, {})
+            if v is not None:
+                env[a.arg] = v
+    return _assign_env(fn.body, env)
+
+
+# -- extraction ---------------------------------------------------------------
+
+def _is_blockspec(call: ast.Call) -> bool:
+    f = call.func
+    return (isinstance(f, ast.Name) and f.id == "BlockSpec") or (
+        isinstance(f, ast.Attribute) and f.attr == "BlockSpec")
+
+
+def _dot_call_name(call: ast.Call) -> str | None:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr in _DOT_FUNCS:
+        return f.attr
+    if isinstance(f, ast.Name) and f.id in _DOT_FUNCS:
+        return f.id
+    return None
+
+
+def _mod_pairs(tree: ast.AST) -> set[tuple[str, str]]:
+    """All ``x % b`` operand pairs anywhere in the module (guards)."""
+    return {
+        (ast.unparse(n.left), ast.unparse(n.right))
+        for n in ast.walk(tree)
+        if isinstance(n, ast.BinOp) and isinstance(n.op, ast.Mod)
+    }
+
+
+def _grid_exprs(fn: ast.FunctionDef) -> list[ast.expr]:
+    """Expressions that feed a ``grid``: ``grid=...`` keywords and
+    assignments to a name called ``grid``."""
+    out: list[ast.expr] = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if kw.arg == "grid":
+                    out.append(kw.value)
+        elif isinstance(node, ast.Assign):
+            if any(isinstance(t, ast.Name) and t.id == "grid"
+                   for t in node.targets):
+                out.append(node.value)
+    return out
+
+
+def _check_module(tree: ast.Module, rep: AnalysisReport, *, subject: str,
+                  locate, sublanes: int, lanes: int) -> None:
+    """Run all three tiling checks over one parsed module.
+
+    ``locate(lineno)`` renders the finding location string, letting kernel
+    files report ``line N`` and UPD bodies report ``def[i] line N``."""
+    module_env = _assign_env(tree.body, {})
+    guards = _mod_pairs(tree)
+    functions = [n for n in ast.walk(tree) if isinstance(n, ast.FunctionDef)]
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            name = _dot_call_name(node)
+            if name and not any(kw.arg == "preferred_element_type"
+                                for kw in node.keywords):
+                rep.add("TSL032",
+                        f"{name}(...) without preferred_element_type= — "
+                        "accumulates in the input dtype",
+                        subject=subject, location=locate(node.lineno))
+
+    for fn in functions:
+        env = _function_env(fn, module_env)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            if _is_blockspec(node) and node.args and isinstance(
+                    node.args[0], ast.Tuple):
+                dims = node.args[0].elts
+                for axis, spec in (((-1), lanes), ((-2), sublanes)):
+                    if len(dims) < -axis:
+                        continue
+                    v = _const_eval(dims[axis], env)
+                    if v is not None and v > 1 and v % spec != 0:
+                        which = "last" if axis == -1 else "second-to-last"
+                        rep.add("TSL030",
+                                f"BlockSpec {which} block dim "
+                                f"{ast.unparse(dims[axis])} = {v} is not a "
+                                f"multiple of {spec} "
+                                f"({'lanes' if axis == -1 else 'sublanes'})",
+                                subject=subject,
+                                location=locate(node.lineno))
+        for expr in _grid_exprs(fn):
+            for node in ast.walk(expr):
+                if isinstance(node, ast.BinOp) and isinstance(
+                        node.op, ast.FloorDiv):
+                    pair = (ast.unparse(node.left), ast.unparse(node.right))
+                    lv = _const_eval(node.left, env)
+                    rv = _const_eval(node.right, env)
+                    if lv is not None and rv and lv % rv == 0:
+                        continue        # statically exact division
+                    if pair not in guards:
+                        rep.add("TSL031",
+                                f"grid uses {pair[0]} // {pair[1]} but no "
+                                f"{pair[0]} % {pair[1]} guard exists in the "
+                                "module — remainder rows are dropped",
+                                subject=subject,
+                                location=locate(node.lineno))
+
+
+# -- entry points -------------------------------------------------------------
+
+def lint_kernel_file(path: Path, *, sublanes: int = 8, lanes: int = 128,
+                     root: Path | None = None) -> AnalysisReport:
+    rep = AnalysisReport()
+    rel = str(path.relative_to(root)) if root else path.name
+    subject = f"file:{rel}"
+    try:
+        tree = ast.parse(path.read_text())
+    except SyntaxError as e:
+        rep.add("TSL040", f"kernel module does not parse: {e.msg} "
+                f"(line {e.lineno})", subject=subject)
+        return rep
+    _check_module(tree, rep, subject=subject,
+                  locate=lambda ln: f"line {ln}",
+                  sublanes=sublanes, lanes=lanes)
+    return rep
+
+
+def lint_rendered_bodies(bodies: list[RenderedBody]) -> AnalysisReport:
+    """Tiling checks over stage-1-rendered UPD definition bodies, each against
+    its own target's declared geometry."""
+    rep = AnalysisReport()
+    for rb in bodies:
+        if rb.tree is None:
+            continue
+        _check_module(rb.tree, rep,
+                      subject=f"primitive:{rb.primitive}",
+                      locate=lambda ln, rb=rb: f"def[{rb.def_index}] "
+                                               f"{rb.target} line {ln}",
+                      sublanes=rb.sublanes, lanes=rb.lanes)
+    return rep

@@ -3,6 +3,7 @@
     python -m repro.core generate --targets cpu_xla,pallas_interpret
     python -m repro.core generate --all --force
     python -m repro.core corpus
+    python -m repro.core analyze --fail-on=error --format=json
     python -m repro.core bench --report bench-report.json
     python -m repro.core bench --smoke
     python -m repro.core cache stats
@@ -123,6 +124,41 @@ def _cmd_bench(args) -> int:
     return 0
 
 
+def _cmd_analyze(args) -> int:
+    """TSL-Check: semantic static analysis over the validated corpus, the
+    cost channel, and the Pallas kernels (stable TSL0xx finding codes)."""
+    from .corpus import load_corpus
+    from repro.analyze import run_analysis
+
+    corpus = load_corpus(tuple(args.upd_path))
+    roots = tuple(Path(p) for p in args.kernels_root) if args.kernels_root \
+        else None
+    rep = run_analysis(corpus, kernel_roots=roots)
+
+    baseline = Path(args.baseline) if args.baseline else None
+    if args.update_baseline:
+        if baseline is None:
+            print("error: --update-baseline requires --baseline PATH",
+                  file=sys.stderr)
+            return 2
+        idents = sorted({f.identity() for f in rep.active_findings()})
+        baseline.write_text("\n".join(idents) + ("\n" if idents else ""))
+        print(f"baseline: {len(idents)} finding identit(ies) -> {baseline}")
+        return 0
+    if baseline is not None and baseline.exists():
+        known = {ln.strip() for ln in baseline.read_text().splitlines()
+                 if ln.strip()}
+        rep.apply_baseline(known)
+
+    if args.report:
+        out = Path(args.report)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        out.with_suffix(".json").write_text(rep.to_json_str() + "\n")
+        out.with_suffix(".md").write_text(rep.to_markdown() + "\n")
+    print(rep.to_json_str() if args.format == "json" else rep.to_text())
+    return rep.exit_code(args.fail_on)
+
+
 def _cmd_cache(args) -> int:
     from .cache import ArtifactCache
     from .library import DEFAULT_BUILD_ROOT
@@ -180,6 +216,24 @@ def build_parser() -> argparse.ArgumentParser:
                    help="single-iteration smoke sweep (CI: exercises the "
                         "benchgen path without the measurement cost)")
     b.set_defaults(fn=_cmd_bench)
+
+    a = sub.add_parser(
+        "analyze", help="TSL-Check: semantic static analysis (TSL0xx codes)")
+    _add_common(a)
+    a.add_argument("--fail-on", choices=("error", "warn", "info", "never"),
+                   default="error",
+                   help="lowest severity that makes the exit code nonzero")
+    a.add_argument("--format", choices=("text", "json"), default="text")
+    a.add_argument("--report", default=None,
+                   help="write <path>.json and <path>.md report files")
+    a.add_argument("--baseline", default=None,
+                   help="accepted-findings file: listed identities do not "
+                        "gate the exit code")
+    a.add_argument("--update-baseline", action="store_true",
+                   help="rewrite --baseline with the current findings")
+    a.add_argument("--kernels-root", action="append", default=[],
+                   help="extra kernel tree to lint (default: repro.kernels)")
+    a.set_defaults(fn=_cmd_analyze)
 
     k = sub.add_parser("cache", help="artifact-cache maintenance")
     _add_common(k)

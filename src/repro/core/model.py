@@ -77,6 +77,7 @@ class ImplDef:
     helpers: str = ""                   # module-level code rendered once (imports, defs)
     cost: dict[str, str] = field(default_factory=dict)  # beyond-paper: flops/bytes formulas
     note: str = ""
+    lint: dict[str, Any] = field(default_factory=dict)  # {"suppress": ["TSL0xx", ...]}
 
     @property
     def loc(self) -> int:
@@ -106,6 +107,8 @@ class PrimitiveDef:
     tests: tuple[TestDef, ...] = ()
     dispatch: str = "auto"              # "auto" | "none" | parameter name
     bench: dict[str, Any] | None = None  # sample-input factory for benchgen
+    cost_shapes: tuple[str, ...] = ()   # shape symbols cost: formulas may use
+    lint: dict[str, Any] = field(default_factory=dict)  # {"suppress": ["TSL0xx", ...]}
     extra: dict[str, Any] = field(default_factory=dict)
 
     def dispatch_param(self) -> str | None:

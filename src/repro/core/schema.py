@@ -156,6 +156,8 @@ DEFINITION_SCHEMA = Schema(
         Entry("helpers", "code", default=""),
         Entry("cost", "dict", default={}),
         Entry("note", "str", default=""),
+        # per-definition analysis suppression: lint: {suppress: [TSL0xx, ...]}
+        Entry("lint", "dict", default={}),
     ),
 )
 
@@ -186,6 +188,12 @@ PRIMITIVE_SCHEMA = Schema(
         # dispatch: "auto" = dtype of first register param, "none" = single
         # specialization (default_ctype), or an explicit parameter name.
         Entry("dispatch", "str", default="auto"),
+        # shape-symbol vocabulary the cost: formulas may reference — the
+        # keyword set callers pass to the generated cost(); checked by
+        # TSL-Check (TSL012/TSL013).
+        Entry("cost_shapes", "list[str]", default=[]),
+        # primitive-wide analysis suppression: lint: {suppress: [TSL0xx, ...]}
+        Entry("lint", "dict", default={}),
         # bench: sample-input factory enabling benchmark-driven adaptive
         # variant selection (beyond-paper, paper §4.2 future work).
         Entry(

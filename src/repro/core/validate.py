@@ -105,6 +105,7 @@ class ValidateGPO:
                         helpers=d["helpers"],
                         cost={k: str(v) for k, v in d["cost"].items()},
                         note=d["note"],
+                        lint=d["lint"],
                     ))
             defs = tuple(defs_list)
             tests = tuple(
@@ -127,6 +128,8 @@ class ValidateGPO:
                 tests=tests,
                 dispatch=doc["dispatch"],
                 bench=doc["bench"],
+                cost_shapes=tuple(doc["cost_shapes"]),
+                lint=doc["lint"],
                 extra=extra,
             )
             if prim.name in ctx.primitives:

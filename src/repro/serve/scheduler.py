@@ -32,10 +32,30 @@ request occupy a slot.
 from __future__ import annotations
 
 import heapq
+import logging
 from collections import deque
 from dataclasses import dataclass
 
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+log = logging.getLogger(__name__)
+
+# (primitive, term) pairs already warned about — the analytic fallback fires
+# once per step otherwise and would flood the serving logs
+_warned_cost_terms: set[tuple[str, str]] = set()
+
+
+def _cost_fallback_warn(primitive: str, term: str) -> None:
+    """A generated package missing a priced cost term is a corpus defect
+    (TSL-Check flags it statically as TSL014); warn ONCE per (primitive,
+    term) so the silent analytic fallback is attributable in logs."""
+    key = (primitive, term)
+    if key not in _warned_cost_terms:
+        _warned_cost_terms.add(key)
+        log.warning(
+            "TSL014: generated library has no cost term %r/%r — admission "
+            "falls back to the analytic formula (run `python -m repro.core "
+            "analyze` to lint the UPD cost channel)", primitive, term)
 
 # fallbacks when the UPD corpus is unavailable (mirrors the serve: block on
 # the attention_prefill_chunk primitive)
@@ -178,8 +198,10 @@ class CostModelAdmission:
     Both are deliberately idealized (roofline = best case); a request whose
     deadline fails even the BEST case is hopeless, which makes refusal sound.
     ``lib.cost`` raising KeyError (a generated package without the term) falls
-    back to the same formula evaluated analytically, so admission never takes
-    the serving path down with it.
+    back to the same formula evaluated analytically — warning once per
+    (primitive, term) with finding code TSL014, so the gap is attributable in
+    logs and statically catchable (`python -m repro.core analyze`) instead of
+    silently mispricing admission.
     """
 
     def __init__(self, cfg, batch: int, max_len: int,
@@ -226,6 +248,7 @@ class CostModelAdmission:
                 from repro.tsl_api import cost
                 raw = cost("attention_decode", "bytes", **shapes)
             except KeyError:
+                _cost_fallback_warn("attention_decode", "bytes")
                 # same formula as the UPD term, evaluated analytically
                 raw = 2.0 * shapes["B"] * (
                     2 * shapes["KH"] * shapes["S"] + 2 * shapes["H"]
@@ -271,6 +294,7 @@ class CostModelAdmission:
                     from repro.tsl_api import cost
                     return cost("attention_prefill_chunk", "flops", **shapes)
                 except KeyError:
+                    _cost_fallback_warn("attention_prefill_chunk", "flops")
                     return 4.0 * shapes["H"] * shapes["C"] * shapes["S"] \
                         * shapes["D"]
 

@@ -1,0 +1,447 @@
+"""TSL-Check (ISSUE 6): the semantic static-analysis GPO.
+
+Covers every analyzer family with small typed corpora built via
+``CorpusIR.from_defs``, the suppression/baseline mechanics, the pipeline
+insertion point, the kernel-file lint on seeded fixtures, and — the headline
+acceptance criterion — that the shipped repo corpus lints clean at
+``--fail-on=error`` while a seeded-violation corpus does not.
+"""
+
+import ast
+import logging
+import textwrap
+
+import pytest
+
+from repro.analyze import (AnalysisReport, AnalyzeGPO, CODES, RenderedBody,
+                           availability_matrix, check_cost_channel,
+                           check_coverage, check_safety, lint_kernel_file,
+                           lint_rendered_bodies, render_bodies, run_analysis)
+from repro.analyze.cost_check import check_formula, formula_symbols
+from repro.core import load_corpus
+from repro.core.corpus import CorpusPipeline
+from repro.core.model import (CorpusIR, ImplDef, ParamDef, PrimitiveDef,
+                              TargetDef, TestDef)
+
+
+# -- tiny typed-corpus builders ----------------------------------------------
+
+def mk_target(name="t0", flags=("xla",), ctypes=("float32",), lanes=128,
+              sublanes=8):
+    return TargetDef(
+        name=name, vendor="test", flags=tuple(flags), ctypes=tuple(ctypes),
+        default_ctype=ctypes[0], lanes=lanes, sublanes=sublanes,
+        mxu=(128, 128), vmem_bytes=1 << 24, hbm_bytes=1 << 30,
+        peak_flops_bf16=1e12, hbm_bw=1e11, ici_bw=1e10, ici_links=1)
+
+
+def mk_impl(target="t0", ctypes=("float32",), flags=("xla",),
+            impl="return x\n", **kw):
+    return ImplDef(target_extension=target, ctypes=tuple(ctypes),
+                   flags=tuple(flags), implementation=impl, **kw)
+
+
+def mk_prim(name, defs, params=("x",), tested=True, **kw):
+    tests = (TestDef(name="t", implementation="pass"),) if tested else ()
+    return PrimitiveDef(
+        name=name, group="g", brief="b",
+        parameters=tuple(ParamDef(name=p) for p in params),
+        returns_ctype="register", definitions=tuple(defs), tests=tests, **kw)
+
+
+def mk_corpus(prims, targets=None):
+    targets = targets if targets is not None else [mk_target()]
+    return CorpusIR.from_defs({t.name: t for t in targets},
+                              {p.name: p for p in prims})
+
+
+# -- finding / report mechanics ----------------------------------------------
+
+def test_code_registry_is_consistent():
+    assert all(c.severity in ("error", "warn", "info") for c in CODES.values())
+    assert all(code == c.code for code, c in CODES.items())
+    assert all(c.rationale for c in CODES.values())
+
+
+def test_report_rejects_unknown_code():
+    rep = AnalysisReport()
+    with pytest.raises(KeyError):
+        rep.add("TSL999", "nope")
+
+
+def test_exit_code_gates():
+    rep = AnalysisReport()
+    rep.add("TSL023", "warn-level finding", subject="primitive:p")
+    rep.add("TSL015", "info-level finding", subject="primitive:p")
+    assert rep.exit_code("error") == 0
+    assert rep.exit_code("warn") == 1
+    assert rep.exit_code("info") == 1
+    assert rep.exit_code("never") == 0
+    rep.add("TSL014", "error-level finding", subject="primitive:p")
+    assert rep.exit_code("error") == 1
+    assert rep.exit_code("never") == 0
+
+
+def test_baseline_masks_identity_not_location():
+    rep = AnalysisReport()
+    rep.add("TSL023", "dead", subject="primitive:p", location="def[1] line 9")
+    ident = rep.findings[0].identity()
+    assert "line" not in ident          # location never participates
+    rep.apply_baseline({ident})
+    assert rep.findings[0].baselined and not rep.findings[0].active
+    assert rep.exit_code("warn") == 0
+    assert rep.counts()["baselined"] == 1
+
+
+def test_suppression_keeps_finding_in_report():
+    rep = AnalysisReport()
+    rep.add("TSL032", "dot", subject="primitive:p", location="def[0] t0 line 2")
+    rep.apply_suppressions(lambda f: f.code == "TSL032")
+    assert rep.findings and rep.findings[0].suppressed
+    assert not rep.active_findings()
+    assert "[suppressed]" in rep.findings[0].render()
+
+
+def test_renderings_cover_all_findings():
+    rep = AnalysisReport()
+    rep.add("TSL014", "missing term", subject="primitive:p",
+            location="target:t0")
+    md, js, txt = rep.to_markdown(), rep.to_json(), rep.to_text()
+    assert "TSL014" in md and "target:t0" in md
+    assert js["findings"][0]["severity"] == "error"
+    assert "1 error(s)" in txt
+
+
+# -- cost channel (TSL01x) ----------------------------------------------------
+
+def test_formula_whitelist():
+    assert check_formula("2*B*H*(S+1)//4")[0] is None
+    assert check_formula("B**2 % 3 - -H")[0] is None
+    assert check_formula("B*")[0] == "TSL010"
+    assert check_formula("__import__('os')")[0] == "TSL011"
+    assert check_formula("B[0]")[0] == "TSL011"
+    assert check_formula("B.real")[0] == "TSL011"
+    assert check_formula("B if H else 1")[0] == "TSL011"
+    assert check_formula("'4'")[0] == "TSL011"
+    assert formula_symbols("2*B*H + S") == {"B", "H", "S"}
+
+
+def test_cost_channel_symbol_binding():
+    prim = mk_prim("p", [mk_impl(cost={"flops": "N*QQ"})],
+                   cost_shapes=("N",))
+    rep = check_cost_channel(mk_corpus([prim]))
+    assert rep.codes() == {"TSL012"}
+    assert "QQ" in rep.findings[0].message
+
+
+def test_cost_channel_missing_shape_declaration():
+    prim = mk_prim("p", [mk_impl(cost={"flops": "N"})])
+    assert check_cost_channel(mk_corpus([prim])).codes() == {"TSL013"}
+
+
+def test_cost_channel_bench_without_cost():
+    prim = mk_prim("p", [mk_impl()], bench={"setup": "x = 1", "n_iter": 1})
+    assert check_cost_channel(mk_corpus([prim])).codes() == {"TSL015"}
+
+
+def test_priced_primitive_gap_and_fix():
+    bad = mk_prim("attention_decode", [mk_impl(cost={"flops": "B"})],
+                  cost_shapes=("B",))
+    rep = check_cost_channel(mk_corpus([bad]))
+    assert "TSL014" in rep.codes()
+    assert any("bytes" in f.message for f in rep.findings
+               if f.code == "TSL014")
+
+    good = mk_prim("attention_decode",
+                   [mk_impl(cost={"flops": "B", "bytes": "B"})],
+                   cost_shapes=("B",))
+    assert "TSL014" not in check_cost_channel(mk_corpus([good])).codes()
+
+
+def test_priced_primitive_bench_requires_every_candidate_priced():
+    # with a bench: block ANY valid candidate can win selection, so one
+    # unpriced candidate breaks the static guarantee even if the heuristic
+    # winner is priced
+    full = mk_impl(flags=("xla", "fast"),
+                   cost={"flops": "B", "bytes": "B"})
+    bare = mk_impl(flags=("xla",))
+    prim = mk_prim("ssd_scan", [full, bare], cost_shapes=("B",),
+                   bench={"setup": "x = 1", "n_iter": 1})
+    corpus = mk_corpus([prim], targets=[mk_target(flags=("xla", "fast"))])
+    rep = check_cost_channel(corpus)
+    assert any(f.code == "TSL014" and "def[1]" in f.message
+               for f in rep.findings)
+
+
+# -- coverage matrix (TSL02x) -------------------------------------------------
+
+def test_coverage_matrix_and_findings():
+    t0, t1 = mk_target("t0"), mk_target("t1")
+    partial = mk_prim("partial", [mk_impl("t0")])
+    untested = mk_prim("untested", [mk_impl("t0"), mk_impl("t1")],
+                       tested=False)
+    ghost = mk_prim("ghost", [mk_impl("t0"),
+                              mk_impl("t0", flags=("no_such_flag",))])
+    corpus = mk_corpus([partial, untested, ghost], targets=[t0, t1])
+
+    matrix = availability_matrix(corpus)
+    assert set(matrix["partial"]) == {"t0"}
+    assert set(matrix["untested"]) == {"t0", "t1"}
+
+    rep = check_coverage(corpus)
+    by = {}
+    for f in rep.findings:
+        by.setdefault(f.code, []).append(f)
+    assert any("partial" in f.subject for f in by["TSL020"])
+    assert any("untested" in f.subject for f in by["TSL021"])
+    assert any("ghost" in f.subject and "no_such_flag" in f.message
+               for f in by["TSL022"])
+    # the unknown-flag def is TSL022, not double-reported as TSL023
+    assert not any("ghost" in f.subject for f in by.get("TSL023", []))
+
+
+def test_dead_candidate_detection():
+    t0 = mk_target("t0", flags=("xla", "fast"))
+    loser = mk_impl(flags=("xla",))
+    winner = mk_impl(flags=("xla", "fast"))
+    dead = mk_prim("dead", [loser, winner])
+    rep = check_coverage(mk_corpus([dead], targets=[t0]))
+    hits = [f for f in rep.findings if f.code == "TSL023"]
+    assert len(hits) == 1 and hits[0].location == "def[0]"
+
+    # a bench: block makes every valid candidate reachable
+    benched = mk_prim("benched", [loser, winner],
+                      bench={"setup": "x = 1", "n_iter": 1})
+    rep = check_coverage(mk_corpus([benched], targets=[t0]))
+    assert not any(f.code == "TSL023" for f in rep.findings)
+
+
+def test_ctype_not_offered_by_target():
+    prim = mk_prim("p", [mk_impl(ctypes=("float32", "int8"))])
+    rep = check_coverage(mk_corpus([prim]))
+    assert any(f.code == "TSL024" and "int8" in f.message
+               for f in rep.findings)
+
+
+# -- stage-1 body rendering (TSL040 infrastructure) ---------------------------
+
+def test_render_bodies_renders_against_target_sru():
+    prim = mk_prim("p", [mk_impl(impl="return x * {{ sru.lanes }}\n")])
+    bodies = render_bodies(mk_corpus([prim]))
+    assert len(bodies) == 1 and not bodies[0].error
+    assert "x * 128" in bodies[0].source
+    assert bodies[0].tree is not None and bodies[0].lanes == 128
+
+
+def test_render_bodies_reports_failures_not_crashes():
+    bad_jinja = mk_prim("badj", [mk_impl(impl="{% if x %}return x\n")])
+    bad_py = mk_prim("badp", [mk_impl(impl="return ((x\n")])
+    bodies = render_bodies(mk_corpus([bad_jinja, bad_py]))
+    errs = {b.primitive: b.error for b in bodies}
+    assert "render failed" in errs["badj"]
+    assert "does not parse" in errs["badp"]
+    rep = run_analysis(mk_corpus([bad_jinja, bad_py]), kernel_roots=())
+    assert "TSL040" in rep.codes()
+
+
+# -- implementation-body safety (TSL04x) --------------------------------------
+
+def _rb(src):
+    src = textwrap.dedent(src)
+    return RenderedBody("p", 0, "t0", "float32", 8, 128, src, ast.parse(src))
+
+
+def test_safety_host_numpy_only_inside_functions():
+    rep = check_safety([_rb("""
+        import numpy as np
+        TABLE = np.arange(8)          # host constant table: legitimate
+
+        def _impl(x):
+            return np.tanh(x)         # traced: forbidden
+    """)])
+    hits = [f for f in rep.findings if f.code == "TSL041"]
+    assert len(hits) == 1 and "line 6" in hits[0].location
+
+
+def test_safety_io_callback_nondet():
+    rep = check_safety([_rb("""
+        def _impl(x):
+            print(x)
+            y = jax.pure_callback(f, x, x)
+            z = jax.debug.callback(f, x)
+            t = time.time()
+            r = np.random.rand()
+            return os.getpid()
+    """)])
+    assert {"TSL041", "TSL042", "TSL043", "TSL044"} <= rep.codes()
+    msgs = " ".join(f.message for f in rep.findings)
+    assert "pure_callback" in msgs and "debug.callback" in msgs
+
+
+def test_safety_jax_random_is_exempt():
+    rep = check_safety([_rb("""
+        def _impl(x, key):
+            return x + jax.random.normal(key, x.shape)
+    """)])
+    assert "TSL044" not in rep.codes()
+
+
+# -- Pallas tiling lint (TSL03x) ----------------------------------------------
+
+BAD_KERNEL = textwrap.dedent("""\
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jnp.dot(x_ref[...], x_ref[...])
+
+
+    def run(x, bm=16, bn=96):
+        m, n = x.shape
+        grid = (m // bm, n // bn)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+""")
+
+GOOD_KERNEL = textwrap.dedent("""\
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jnp.dot(x_ref[...], x_ref[...],
+                             preferred_element_type=jnp.float32)
+
+
+    def run(x, bm=16, bn=128):
+        m, n = x.shape
+        assert m % bm == 0 and n % bn == 0
+        grid = (m // bm, n // bn)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+""")
+
+
+def test_kernel_lint_flags_seeded_violations(tmp_path):
+    path = tmp_path / "bad" / "kernel.py"
+    path.parent.mkdir()
+    path.write_text(BAD_KERNEL)
+    rep = lint_kernel_file(path, sublanes=8, lanes=128, root=tmp_path)
+    codes = [f.code for f in rep.findings]
+    assert codes.count("TSL030") == 2          # bn=96 in both BlockSpecs
+    assert codes.count("TSL031") == 2          # m//bm and n//bn unguarded
+    assert codes.count("TSL032") == 1          # bare jnp.dot
+    assert all(f.subject == "file:bad/kernel.py" for f in rep.findings)
+
+
+def test_kernel_lint_accepts_guarded_aligned_kernel(tmp_path):
+    path = tmp_path / "kernel.py"
+    path.write_text(GOOD_KERNEL)
+    rep = lint_kernel_file(path, sublanes=8, lanes=128)
+    assert not rep.findings
+
+
+def test_kernel_lint_syntax_error_is_tsl040(tmp_path):
+    path = tmp_path / "kernel.py"
+    path.write_text("def broken(:\n")
+    rep = lint_kernel_file(path)
+    assert rep.codes() == {"TSL040"}
+
+
+def test_rendered_body_lint_uses_target_geometry():
+    # same body, two geometries: a (8, 96) block is clean for lanes=32
+    # (gpu warp) and misaligned for lanes=128 (tpu)
+    impl = ("block = pl.BlockSpec((8, 96), lambda i: (i, 0))\n"
+            "return x\n")
+    tpu = mk_target("tpu", lanes=128, sublanes=8)
+    gpu = mk_target("gpu", lanes=32, sublanes=1)
+    prim = mk_prim("p", [mk_impl("tpu", impl=impl), mk_impl("gpu", impl=impl)])
+    bodies = render_bodies(mk_corpus([prim], targets=[tpu, gpu]))
+    rep = lint_rendered_bodies(bodies)
+    hits = [f for f in rep.findings if f.code == "TSL030"]
+    assert len(hits) == 1 and "tpu" in hits[0].location
+
+
+# -- GPO + whole-repo acceptance ----------------------------------------------
+
+@pytest.fixture(scope="module")
+def repo_report():
+    return run_analysis(load_corpus())
+
+
+def test_analyze_gpo_inserts_after_validate():
+    pipe = CorpusPipeline()
+    gpo = AnalyzeGPO(fail_on="never")
+    pipe.insert_after("validate", gpo)
+    assert pipe.names() == ["template-check", "validate", "analyze"]
+    corpus = pipe.build()
+    assert gpo.report is not None
+    assert len(corpus.primitives) > 20          # corpus still fully built
+    # repo corpus has no error-severity findings -> a strict fail_on="error"
+    # build must also pass
+    strict = CorpusPipeline()
+    strict.insert_after("validate", AnalyzeGPO(fail_on="error"))
+    strict.build()
+
+
+def test_repo_corpus_lints_clean_at_fail_on_error(repo_report):
+    """ISSUE 6 acceptance: `analyze --fail-on=error` exits 0 on the repo."""
+    rep = repo_report
+    assert rep.exit_code("error") == 0, [
+        f.render() for f in rep.active_findings() if f.severity == "error"]
+
+
+def test_expert_ffn_suppression_is_exercised(repo_report):
+    """The shipped corpus demonstrates lint: {suppress: [...]} — expert_ffn's
+    f32-upcast einsums suppress TSL032 per definition."""
+    rep = repo_report
+    sup = [f for f in rep.findings
+           if f.suppressed and f.subject == "primitive:expert_ffn"]
+    assert sup and all(f.code == "TSL032" for f in sup)
+    assert not any(f.active and f.code == "TSL032"
+                   and f.subject == "primitive:expert_ffn"
+                   for f in rep.findings)
+
+
+def test_every_serving_cost_formula_statically_verified(repo_report):
+    """The two cost terms the serving scheduler actually evaluates must be
+    guaranteed for every target (no TSL014 anywhere on the repo corpus)."""
+    assert not any(f.code == "TSL014"
+                   for f in repo_report.active_findings())
+
+
+# -- satellite: scheduler fallback attribution --------------------------------
+
+def test_scheduler_cost_fallback_warns_once_with_tsl014(monkeypatch, caplog):
+    import repro.tsl_api as tsl_api
+    from repro.configs import get_config
+    from repro.serve import scheduler as sched
+
+    def missing_term(*a, **k):
+        raise KeyError("attention_decode")
+
+    monkeypatch.setattr(tsl_api, "cost", missing_term)
+    monkeypatch.setattr(sched, "_warned_cost_terms", set())
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    adm = sched.CostModelAdmission(cfg, batch=2, max_len=32)
+    with caplog.at_level(logging.WARNING, logger="repro.serve.scheduler"):
+        adm.decode_bytes_per_step()
+        adm.decode_bytes_per_step(16)       # second hit: deduplicated
+    msgs = [r.getMessage() for r in caplog.records
+            if "TSL014" in r.getMessage()]
+    assert len(msgs) == 1
+    assert "attention_decode" in msgs[0] and "bytes" in msgs[0]
+    assert "repro.core analyze" in msgs[0]

@@ -1,0 +1,193 @@
+"""Golden-findings fixtures (ISSUE 6 satellite): a seeded-violation UPD
+mini-corpus pushed through the real CLI must produce exactly the expected
+TSL0xx codes and a nonzero exit, proving the analyzer catches what it claims
+to catch end-to-end (loader -> validate -> analyze -> report -> exit code).
+"""
+
+import json
+
+import pytest
+
+from repro.core import cli
+
+MINI_TARGET = """\
+---
+name: "minitgt"
+vendor: "test"
+description: "Fixture SRU for TSL-Check golden tests."
+lscpu_flags: ["xla", "mini"]
+ctypes: ["float32"]
+default_ctype: "float32"
+lanes: 128
+sublanes: 8
+mxu: [128, 128]
+vmem_bytes: 16777216
+hbm_bytes: 1073741824
+peak_flops_bf16: 1.0e+12
+hbm_bw: 1.0e+11
+ici_bw: 1.0e+10
+ici_links: 1
+interpret: true
+runs_on_host: true
+...
+"""
+
+# each primitive seeds exactly one violation family
+MINI_PRIMS = """\
+---
+primitive_name: "bad_cost"
+group: "fixture"
+brief: "cost formula references a symbol outside cost_shapes -> TSL012."
+parameters:
+  - {name: "x", ctype: "register"}
+returns: {ctype: "register"}
+cost_shapes: ["N"]
+definitions:
+  - target_extension: "minitgt"
+    ctype: ["float32"]
+    lscpu_flags: ["xla"]
+    cost: {"flops": "2*N*QQ"}
+    implementation: |
+      return x
+testing:
+  - name: "t"
+    requires: []
+    implementation: |
+      pass
+...
+---
+primitive_name: "untested_prim"
+group: "fixture"
+brief: "no testing: entries -> TSL021."
+parameters:
+  - {name: "x", ctype: "register"}
+returns: {ctype: "register"}
+definitions:
+  - target_extension: "minitgt"
+    ctype: ["float32"]
+    lscpu_flags: ["xla"]
+    implementation: |
+      return x
+...
+---
+primitive_name: "bad_np"
+group: "fixture"
+brief: "host numpy inside the traced body -> TSL041."
+parameters:
+  - {name: "x", ctype: "register"}
+returns: {ctype: "register"}
+definitions:
+  - target_extension: "minitgt"
+    ctype: ["float32"]
+    lscpu_flags: ["xla"]
+    implementation: |
+      return np.tanh(x)
+testing:
+  - name: "t"
+    requires: []
+    implementation: |
+      pass
+...
+---
+primitive_name: "bad_tile"
+group: "fixture"
+brief: "misaligned BlockSpec + unguarded grid remainder -> TSL030/TSL031."
+parameters:
+  - {name: "x", ctype: "register"}
+  - {name: "n", ctype: "int", attributes: ["keyword_only"]}
+returns: {ctype: "register"}
+definitions:
+  - target_extension: "minitgt"
+    ctype: ["float32"]
+    lscpu_flags: ["xla"]
+    implementation: |
+      spec = pl.BlockSpec((8, 96), lambda i: (i, 0))
+      grid = (n // 7,)
+      return x
+testing:
+  - name: "t"
+    requires: []
+    implementation: |
+      pass
+...
+"""
+
+
+@pytest.fixture(scope="module")
+def mini_upd(tmp_path_factory):
+    root = tmp_path_factory.mktemp("tslcheck_upd")
+    (root / "targets").mkdir()
+    (root / "primitives").mkdir()
+    (root / "targets" / "minitgt.yaml").write_text(MINI_TARGET)
+    (root / "primitives" / "fixture.yaml").write_text(MINI_PRIMS)
+    return root
+
+
+@pytest.fixture(scope="module")
+def golden(mini_upd, tmp_path_factory):
+    """One CLI run shared by every assertion: (exit_code, parsed report)."""
+    report = tmp_path_factory.mktemp("out") / "findings"
+    rc = cli.main(["analyze", "--upd-path", str(mini_upd),
+                   "--format", "json", "--fail-on", "error",
+                   "--report", str(report)])
+    data = json.loads(report.with_suffix(".json").read_text())
+    md = report.with_suffix(".md").read_text()
+    return rc, data, md
+
+
+def _active(data, code):
+    return [f for f in data["findings"]
+            if f["code"] == code and not f["suppressed"] and not f["baselined"]]
+
+
+def test_seeded_corpus_fails_the_error_gate(golden):
+    rc, data, _ = golden
+    assert rc != 0
+    assert data["counts"]["error"] > 0
+
+
+def test_bad_cost_symbol_is_tsl012(golden):
+    _, data, _ = golden
+    hits = _active(data, "TSL012")
+    assert any(f["subject"] == "primitive:bad_cost" and "QQ" in f["message"]
+               for f in hits)
+
+
+def test_untested_primitive_is_tsl021(golden):
+    _, data, _ = golden
+    assert any(f["subject"] == "primitive:untested_prim"
+               for f in _active(data, "TSL021"))
+
+
+def test_traced_numpy_is_tsl041(golden):
+    _, data, _ = golden
+    hits = [f for f in _active(data, "TSL041")
+            if f["subject"] == "primitive:bad_np"]
+    assert hits and all(f["severity"] == "error" for f in hits)
+
+
+def test_misaligned_blockspec_and_grid_are_tsl030_tsl031(golden):
+    _, data, _ = golden
+    t30 = [f for f in _active(data, "TSL030")
+           if f["subject"] == "primitive:bad_tile"]
+    t31 = [f for f in _active(data, "TSL031")
+           if f["subject"] == "primitive:bad_tile"]
+    assert t30 and "96" in t30[0]["message"]
+    assert t31 and "n // 7" in t31[0]["message"]
+
+
+def test_priced_primitives_unreachable_on_new_target_is_tsl014(golden):
+    # the fixture target offers no attention_decode/... definitions, so the
+    # serving cost guarantee cannot hold there -- exactly what TSL014 states
+    _, data, _ = golden
+    hits = _active(data, "TSL014")
+    assert any(f["location"] == "target:minitgt" for f in hits)
+    # the shipped targets stay fully priced even with the fixture mixed in
+    assert all(f["location"] == "target:minitgt" for f in hits)
+
+
+def test_markdown_report_groups_by_code(golden):
+    _, _, md = golden
+    assert "# TSL-Check findings" in md
+    assert "## `TSL012`" in md and "## `TSL041`" in md
+    assert "primitive:bad_tile" in md

@@ -1,0 +1,109 @@
+"""ValidateGPO error paths (ISSUE 6 satellite): malformed documents must
+become collected, actionable errors — never exceptions mid-validation — and
+the strict corpus build must refuse to produce an IR from a broken UPD."""
+
+import pytest
+
+from repro.core.corpus import CorpusPipeline
+from repro.core.model import CorpusBuild
+from repro.core.pipeline import GenerationError
+from repro.core.validate import ValidateGPO
+
+
+def run_validate(raw_targets=(), raw_primitives=()):
+    cb = CorpusBuild()
+    cb.raw_targets = [dict(d) for d in raw_targets]
+    cb.raw_primitives = [dict(d) for d in raw_primitives]
+    return ValidateGPO().run(cb)
+
+
+GOOD_TARGET = {"name": "t0", "lscpu_flags": ["xla"], "ctypes": ["float32"]}
+GOOD_PRIM = {
+    "primitive_name": "p",
+    "parameters": [{"name": "x"}],
+    "definitions": [{"target_extension": "t0", "ctype": ["float32"],
+                     "lscpu_flags": ["xla"], "implementation": "return x\n"}],
+    "testing": [{"name": "t", "implementation": "pass"}],
+}
+
+
+def test_well_formed_docs_validate_clean():
+    ctx = run_validate([GOOD_TARGET], [GOOD_PRIM])
+    assert not ctx.errors
+    assert set(ctx.targets) == {"t0"} and set(ctx.primitives) == {"p"}
+
+
+def test_target_missing_mandatory_fields():
+    ctx = run_validate([{"name": "t0"}])          # no lscpu_flags/ctypes
+    assert any("lscpu_flags" in e and "mandatory" in e for e in ctx.errors)
+    assert any("ctypes" in e and "mandatory" in e for e in ctx.errors)
+    assert not ctx.targets                        # broken doc never registered
+
+
+def test_target_with_wrong_field_types():
+    bad = dict(GOOD_TARGET, lscpu_flags="xla", lanes="many")
+    ctx = run_validate([bad])
+    assert any("lscpu_flags" in e and "expected list[str]" in e
+               for e in ctx.errors)
+    assert any("lanes" in e and "expected int" in e for e in ctx.errors)
+
+
+def test_duplicate_target_names():
+    ctx = run_validate([GOOD_TARGET, GOOD_TARGET])
+    assert any("duplicate target 't0'" in e for e in ctx.errors)
+
+
+def test_duplicate_primitive_names():
+    ctx = run_validate([GOOD_TARGET], [GOOD_PRIM, GOOD_PRIM])
+    assert any("duplicate primitive 'p'" in e for e in ctx.errors)
+
+
+def test_definition_references_unknown_target():
+    prim = dict(GOOD_PRIM)
+    prim["definitions"] = [dict(GOOD_PRIM["definitions"][0],
+                                target_extension="nowhere")]
+    ctx = run_validate([GOOD_TARGET], [prim])
+    assert any("unknown target 'nowhere'" in e for e in ctx.errors)
+
+
+def test_definition_target_extension_wrong_type():
+    prim = dict(GOOD_PRIM)
+    prim["definitions"] = [dict(GOOD_PRIM["definitions"][0],
+                                target_extension=123)]
+    ctx = run_validate([GOOD_TARGET], [prim])
+    assert any("target_extension must be str or list[str]" in e
+               for e in ctx.errors)
+
+
+def test_unknown_ctype_warns_but_validates():
+    prim = dict(GOOD_PRIM)
+    prim["definitions"] = [dict(GOOD_PRIM["definitions"][0],
+                                ctype=["float32", "int8"])]
+    ctx = run_validate([GOOD_TARGET], [prim])
+    assert not ctx.errors
+    assert any("ctype 'int8' not listed for target 't0'" in w
+               for w in ctx.warnings)
+
+
+def test_primitive_missing_definitions_is_an_error():
+    ctx = run_validate([GOOD_TARGET], [{"primitive_name": "p"}])
+    assert any("definitions" in e and "mandatory" in e for e in ctx.errors)
+    assert not ctx.primitives
+
+
+def test_untested_primitive_warns_per_paper():
+    prim = {k: v for k, v in GOOD_PRIM.items() if k != "testing"}
+    ctx = run_validate([GOOD_TARGET], [prim])
+    assert any("no test cases defined" in w for w in ctx.warnings)
+
+
+def test_strict_corpus_build_refuses_malformed_target_yaml(tmp_path):
+    (tmp_path / "targets").mkdir()
+    (tmp_path / "primitives").mkdir()
+    (tmp_path / "targets" / "broken.yaml").write_text(
+        "---\nname: 3\nlanes: \"wide\"\n...\n")
+    with pytest.raises(GenerationError) as ei:
+        CorpusPipeline().build((str(tmp_path),))
+    msg = str(ei.value)
+    assert "mandatory entry missing" in msg
+    assert "expected str" in msg or "expected int" in msg
