@@ -81,9 +81,36 @@ def run() -> list[str]:
         qc, n_iter=30)
     emit("prim_attention_prefill_chunk_tsl", t_tsl,
          f"overhead={(t_tsl-t_raw)/t_raw*100:+.1f}% "
-         f"({2 * 64 / t_tsl:,.0f} prefill tok/s)")
+         f"({2 * 64 / (t_tsl * 1e-6):,.0f} prefill tok/s)")
     emit("prim_attention_prefill_chunk_direct", t_raw, "")
     out.append(f"attention_prefill_chunk overhead {(t_tsl-t_raw)/t_raw*100:+.1f}%")
+
+    # speculative verify path (ISSUE 7): ONE ragged verify span (SV = k+1
+    # rows per slot, per-slot kv_len vector) vs the k+1 SEQUENTIAL decode
+    # steps it replaces when every draft is accepted — the throughput gap is
+    # what the engine's cost-priced depth decision banks on
+    spec_k = 4
+    sv = spec_k + 1
+    kv_vec = jnp.asarray([448, 320], jnp.int32)     # ragged slot fills
+    qv = jnp.asarray(rng.normal(size=(2, 8, sv, 64)), jnp.float32)
+
+    def _verify(a):
+        return lib.ops.attention_verify(a, k, v, kv_len=kv_vec)
+
+    def _decode_chain(a):
+        o = a
+        for _ in range(sv):                          # dependent, like decode
+            o = fa_ref.attention_decode(o, k, v)
+        return o
+
+    t_verify = time_fn(jax.jit(_verify), qv, n_iter=30)
+    t_chain = time_fn(jax.jit(_decode_chain), qd, n_iter=30)
+    emit("prim_attention_verify_tsl", t_verify,
+         f"span={sv} vs {sv} decode steps: {t_chain / t_verify:.2f}x "
+         f"({2 * sv / (t_verify * 1e-6):,.0f} verified tok/s)")
+    emit("prim_attention_decode_x5_direct", t_chain, "")
+    out.append(f"attention_verify span {sv}: {t_chain / t_verify:.2f}x vs "
+               f"{sv} sequential decode steps")
 
     a = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     b = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)

@@ -1,0 +1,96 @@
+"""Speculative decoding demo: the slot engine drafts ahead with a free n-gram
+prompt-lookup drafter and verifies every slot's proposal in ONE batched ragged
+``attention_verify`` step, with per-slot speculation depth priced by the
+generated library's cost channel.
+
+Three claims, each asserted:
+
+1. Mixed greedy AND sampled requests share one verify span — per-request
+   ``temperature`` overrides coexist in a single batched step, and the greedy
+   request's output is exactly what the plain (non-speculative) engine emits.
+2. On a repetitive prompt the drafter earns its keep: accepted-token rate
+   > 0 and the engine's per-slot decode steps per emitted token < 1.0.
+3. ``fixed_k=0`` degrades to the ORIGINAL decode path, token-for-token —
+   including the sampled request (same key-draw sequence).
+
+    PYTHONPATH=src python examples/serve_speculative.py
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.serve import (Request, SamplingConfig, ServeEngine,  # noqa: E402
+                         SpeculationConfig)
+
+REPETITIVE = [5, 6, 7, 8] * 4   # prompt-lookup heaven: pure period-4 cycle
+
+
+def requests(cfg):
+    rnd = np.random.default_rng(0).integers(1, cfg.vocab, 8)
+    return [
+        # greedy request on a repetitive prompt: drafts should hit
+        Request(rid="greedy-rep", tokens=np.array(REPETITIVE), gen_len=14),
+        # sampled neighbour sharing the verify span (temperature override)
+        Request(rid="sampled", tokens=rnd, gen_len=10, temperature=0.8),
+        # third request exercises mid-stream slot reuse under speculation
+        Request(rid="greedy-late", tokens=np.array(REPETITIVE[:7]),
+                gen_len=8),
+    ]
+
+
+def run(cfg, speculation):
+    jax.clear_caches()
+    engine = ServeEngine(
+        cfg, batch=2, max_len=48, admission=False, seed=0,
+        sampling=SamplingConfig(temperature=0.0),   # default greedy
+        speculation=speculation)
+    return engine.run(requests(cfg))
+
+
+def main():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+
+    print("[example] plain decode (reference)")
+    plain = run(cfg, None)
+
+    print("[example] speculative decode: n-gram drafter, cost-priced depth")
+    spec = run(cfg, SpeculationConfig(drafter="ngram", fixed_k=3))
+    s = spec["spec"]
+    print(f"[example]   drafted {s['drafted_tokens']}, accepted "
+          f"{s['accepted_tokens']} (rate {s['accepted_rate']:.2f}), "
+          f"mean accepted span {s['mean_accepted_span']:.2f}")
+    print(f"[example]   slot-steps per emitted token: "
+          f"{s['slot_steps_per_emitted_token']:.2f} (plain decode = 1.0)")
+    print(f"[example]   accept by bucket: {s['accept_by_bucket']}")
+
+    # 1. greedy outputs are bit-identical to plain decode, sampled neighbour
+    #    and all — speculation is lossless
+    for rid in ("greedy-rep", "greedy-late"):
+        assert spec["outputs"][rid] == plain["outputs"][rid], rid
+    # 2. the drafter found repetition: real acceptance, fewer slot-steps
+    #    than emitted tokens
+    assert s["accepted_rate"] > 0, s
+    assert s["slot_steps_per_emitted_token"] < 1.0, s
+    # only target-emitted tokens are billed as output
+    for m in spec["per_request"]:
+        assert m["tokens_out"] == len(spec["outputs"][m["rid"]]), m
+
+    print("[example] k=0 degradation: original decode path, same key draws")
+    k0 = run(cfg, SpeculationConfig(fixed_k=0))
+    # 3. token-for-token identical INCLUDING the sampled request
+    assert k0["outputs"] == plain["outputs"], "k=0 must match plain decode"
+    assert k0["spec"]["verify_steps"] == 0, k0["spec"]
+    print("[example]   k=0 outputs identical to plain decode "
+          "(incl. sampled request)")
+
+    print("[example] speculative serving demo OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,7 @@ finding instead of a runtime surprise:
 * every free symbol must be bound by the primitive's declared ``cost_shapes``
   vocabulary — the keyword set callers are expected to pass (TSL012; a
   cost-carrying primitive without the declaration gets TSL013);
-* the four primitives the serving scheduler prices must land BOTH a ``flops``
+* the primitives the serving scheduler prices must land BOTH a ``flops``
   and a ``bytes`` term in the generated ``_cost.py`` of every target, for
   every candidate bench selection could pick (TSL014).
 """
@@ -30,6 +30,7 @@ from .findings import AnalysisReport
 PRICED_PRIMITIVES: dict[str, tuple[str, ...]] = {
     "attention_decode": ("flops", "bytes"),
     "attention_prefill_chunk": ("flops", "bytes"),
+    "attention_verify": ("flops", "bytes"),
     "ssd_scan": ("flops", "bytes"),
     "wkv6_scan": ("flops", "bytes"),
 }

@@ -116,6 +116,24 @@ def attention_chunked(q, k, v, *, causal: bool = True, scale: float | None = Non
     return o.reshape(b, h, sq, d).astype(q.dtype)
 
 
+def attention_verify(q, k_cache, v_cache, *, kv_len=None, scale: float | None = None,
+                     block_k: int = 1024):
+    """Speculative-decoding verify span: q (B,H,SV,D) holds the pending token
+    plus the drafted continuation for each slot; the caches (B,KH,S,D) already
+    contain the span's K/V rows written at [kv_len-SV, kv_len). Causality is
+    ends-aligned at ``kv_len`` exactly like :func:`attention_chunked` — row j
+    of the span attends to the cache up to position kv_len - SV + j — so with
+    SV == 1 this IS the decode step, and the accepted-prefix contract holds
+    row-by-row: row j's output is independent of rows > j.
+
+    ``kv_len`` may be a (B,) vector (the slot table: every slot sits at its
+    own fill). Shares the online-softmax chunked backend; ``block_k`` is the
+    bench-owned key-block candidate knob.
+    """
+    return attention_chunked(q, k_cache, v_cache, causal=True, scale=scale,
+                             kv_len=kv_len, block_k=block_k)
+
+
 def attention_decode(q, k_cache, v_cache, *, kv_len=None, scale: float | None = None):
     """Single-token decode: q (B,H,1,D) vs caches (B,KH,S,D).
 

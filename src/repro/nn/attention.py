@@ -116,23 +116,57 @@ def attention_prefill_chunk(p, x, k_cache, v_cache, pos, cfg):
     row lies beyond the real fill (pos+n_real) where the decode-path kv_len
     mask hides it until the next chunk/decode step overwrites it.
 
-    ``pos`` may be traced (jit-stable over cache fill). Returns
+    ``pos`` may be traced (jit-stable over cache fill) and may be a (B,)
+    vector of PER-SLOT base positions (ragged chunks over the slot table:
+    RoPE, the slab scatter, and kv_len all become per-slot). Returns
     (y (B,C,D), k_cache', v_cache')."""
+    return _span_attend(p, x, k_cache, v_cache, pos, cfg,
+                        tsl.attention_prefill_chunk)
+
+
+def attention_verify(p, x, k_cache, v_cache, pos, cfg):
+    """Speculative-decoding verify span: x (B,SV,D) holds each slot's pending
+    token + drafted continuation; ``pos`` is the span's base write position
+    (scalar or (B,) per-slot). Writes the span's K/V at rows [pos, pos+SV)
+    and scores every row in ONE ragged batched step through
+    ``tsl.attention_verify`` (causal, ends-aligned at pos+SV), so row j's
+    output is independent of rows > j — the accepted-prefix contract.
+    Rollback of rejected rows is free: they lie beyond the committed kv_len,
+    where the decode-path mask hides them until overwritten.
+
+    Returns (y (B,SV,D), k_cache', v_cache')."""
+    return _span_attend(p, x, k_cache, v_cache, pos, cfg, tsl.attention_verify)
+
+
+def _span_attend(p, x, k_cache, v_cache, pos, cfg, span_op):
+    """Shared prefill-chunk / verify-span body: project, slab-write, attend."""
     b, c, _ = x.shape
     h, hd = cfg.n_heads, cfg.hd
     pos = jnp.asarray(pos)
+    per_slot = pos.ndim == 1
+    positions = (pos[:, None] + jnp.arange(c)[None, :] if per_slot
+                 else pos + jnp.arange(c))
     # same projection pipeline (bias/qk_norm/RoPE/TP sharding) as the
     # full-sequence path — q/k/v come back heads-major (B,{H|KH},C,hd)
-    q, k, v = _project_qkv(p, x, cfg, pos + jnp.arange(c))
-    # contiguous C-row slab write at the chunk's base position (cache layout
-    # (B,KH,S,hd): tsl.cache_update writes along axis 1 -> swap S forward)
-    k_cache = jnp.swapaxes(
-        tsl.cache_update(jnp.swapaxes(k_cache, 1, 2),
-                         k.transpose(0, 2, 1, 3), pos), 1, 2)
-    v_cache = jnp.swapaxes(
-        tsl.cache_update(jnp.swapaxes(v_cache, 1, 2),
-                         v.transpose(0, 2, 1, 3), pos), 1, 2)
-    o = tsl.attention_prefill_chunk(q, k_cache, v_cache, kv_len=pos + c)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if per_slot:
+        # per-slot slab scatter: vmap the TSL update over the batch axis so
+        # each slot writes its C rows at its own base (leaf (KH,S,hd): the
+        # update (KH,C,hd) lands along axis 1 = S)
+        upd = jax.vmap(tsl.cache_update)
+        k_cache = upd(k_cache, k, pos)
+        v_cache = upd(v_cache, v, pos)
+    else:
+        # contiguous C-row slab write at the chunk's base position (cache
+        # layout (B,KH,S,hd): tsl.cache_update writes along axis 1 -> swap
+        # S forward)
+        k_cache = jnp.swapaxes(
+            tsl.cache_update(jnp.swapaxes(k_cache, 1, 2),
+                             k.transpose(0, 2, 1, 3), pos), 1, 2)
+        v_cache = jnp.swapaxes(
+            tsl.cache_update(jnp.swapaxes(v_cache, 1, 2),
+                             v.transpose(0, 2, 1, 3), pos), 1, 2)
+    o = span_op(q, k_cache, v_cache, kv_len=pos + c)
     o = o.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
     return tsl.matmul(o, p["wo"]), k_cache, v_cache
 

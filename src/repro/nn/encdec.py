@@ -23,8 +23,8 @@ def _scan(f, init, xs, **kw):
 
 
 from .attention import (attention_decode, attention_forward,
-                        attention_prefill_chunk, cross_attention_forward,
-                        init_attention, project_kv)
+                        attention_prefill_chunk, attention_verify,
+                        cross_attention_forward, init_attention, project_kv)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .mlp import init_mlp, mlp_forward
 
@@ -180,6 +180,34 @@ def encdec_prefill_chunk(params, state, tokens, pos, cfg, *, audio_embeds=None):
     def body(x_c, inp):
         bp, kc, vc, ck, cv = inp
         h, kc, vc = attention_prefill_chunk(
+            bp["self_attn"], apply_norm_params(cfg, bp["self_norm"], x_c),
+            kc, vc, pos, cfg)
+        x_c = x_c + h
+        q_in = apply_norm_params(cfg, bp["cross_norm"], x_c)
+        x_c = x_c + cross_attention_forward(bp["cross_attn"], q_in, ck, cv, cfg)
+        x_c = x_c + mlp_forward(bp["mlp"], apply_norm_params(cfg, bp["mlp_norm"], x_c), cfg)
+        return x_c, (kc, vc)
+
+    x, (k, v) = _scan(
+        body, x, (params["dec_blocks"], state["k"], state["v"],
+                  state["cross_k"], state["cross_v"]))
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    logits = tsl.matmul(x, params["head"])
+    return logits, {**state, "k": k, "v": v}
+
+
+def encdec_verify_step(params, state, tokens, pos, cfg):
+    """Speculative-decoding verify span: causal self-attention over the span
+    through the attention_verify primitive (K/V slab at [pos, pos+SV));
+    cross-attention is non-causal row-by-row against the precomputed cross
+    K/V, so any span width scores exactly. KV rollback is free (kv_len
+    truncation) — the updated state is returned, rejected rows sit beyond
+    the committed fill. Returns (logits (B,SV,V), new state)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+
+    def body(x_c, inp):
+        bp, kc, vc, ck, cv = inp
+        h, kc, vc = attention_verify(
             bp["self_attn"], apply_norm_params(cfg, bp["self_norm"], x_c),
             kc, vc, pos, cfg)
         x_c = x_c + h

@@ -20,7 +20,7 @@ def _scan(f, init, xs, **kw):
 
 
 from .attention import (attention_decode, attention_forward, attention_prefill_chunk,
-                        init_attention)
+                        attention_verify, init_attention)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .mlp import init_mlp, mlp_forward
 from .moe import init_moe, moe_forward
@@ -169,6 +169,38 @@ def lm_prefill_chunk(params, state, tokens, pos, cfg, *, vision_embeds=None):
     def body(x_c, inp):
         bp, kc, vc = inp
         h, kc, vc = attention_prefill_chunk(
+            bp["attn"], apply_norm_params(cfg, bp["attn_norm"], x_c),
+            kc, vc, pos, cfg)
+        x_c = x_c + h
+        y = apply_norm_params(cfg, bp["mlp_norm"], x_c)
+        if cfg.n_experts:
+            y, _ = moe_forward(bp["moe"], y, cfg)
+        else:
+            y = mlp_forward(bp["mlp"], y, cfg)
+        return x_c + y, (kc, vc)
+
+    x, (k_new, v_new) = _scan(body, x, (params["blocks"], state["k"],
+                                        state["v"]))
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    logits = lm_head(params, x, cfg)
+    return logits, {"k": k_new, "v": v_new}
+
+
+def lm_verify_step(params, state, tokens, pos, cfg):
+    """Speculative-decoding verify span. tokens (B,SV): each slot's pending
+    token + drafted continuation; ``pos`` scalar or (B,) per-slot base write
+    index. The span's K/V land at rows [pos, pos+SV); one ragged batched
+    attention_verify scores every row (logits row j validates draft j+1).
+
+    Rollback is free for this family: the accepted fill pos+m+1 simply stops
+    short of the rejected rows, whose cache entries sit beyond kv_len where
+    the decode mask hides them until overwritten. Returns
+    (logits (B,SV,V), new state)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+
+    def body(x_c, inp):
+        bp, kc, vc = inp
+        h, kc, vc = attention_verify(
             bp["attn"], apply_norm_params(cfg, bp["attn_norm"], x_c),
             kc, vc, pos, cfg)
         x_c = x_c + h

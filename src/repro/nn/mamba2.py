@@ -60,7 +60,8 @@ def _discretize(p, dt_raw, x, cfg):
 def mamba2_forward(p, x_seq, cfg, *, h0=None, conv_prev=None, n_real=None):
     """x_seq: (B,T,D) -> (y (B,T,D), (h_final, conv_tail)).
 
-    ``n_real`` (scalar, may be traced): positions >= n_real are padding —
+    ``n_real`` (scalar or (B,) per-sequence, may be traced): positions
+    >= n_real are padding —
     their SSD update is forced to the identity (decay 1, input 0) so
     ``h_final`` is exactly the state after the last REAL token, and the conv
     tail ends at the last real row. Their y rows are garbage the caller
@@ -82,9 +83,11 @@ def mamba2_forward(p, x_seq, cfg, *, h0=None, conv_prev=None, n_real=None):
     xc = tsl.silu(xc)
     a, x_scaled, xh = _discretize(p, dt_raw, xc, cfg)
     if n_real is not None:
-        valid = jnp.arange(t) < n_real                       # (T,)
-        a = jnp.where(valid[None, :, None], a, jnp.ones_like(a))
-        x_scaled = jnp.where(valid[None, :, None, None], x_scaled,
+        nr = jnp.asarray(n_real)
+        nr = nr[:, None] if nr.ndim else nr     # (B,) per-sequence or scalar
+        valid = jnp.arange(t)[None, :] < nr                  # (1|B, T)
+        a = jnp.where(valid[:, :, None], a, jnp.ones_like(a))
+        x_scaled = jnp.where(valid[:, :, None, None], x_scaled,
                              jnp.zeros_like(x_scaled))
     y, h_final = tsl.ssd_scan(x_scaled, a, b, c, h0=h0)
     y = y + p["D_skip"][None, None, :, None].astype(y.dtype) * xh
@@ -94,8 +97,12 @@ def mamba2_forward(p, x_seq, cfg, *, h0=None, conv_prev=None, n_real=None):
         # window of KW-1 rows ending at the last real row: xr_in row
         # (kw-1) + n_real - 1 — a dynamic slice so n_real may be traced
         # (and it degrades gracefully to leading zeros when n_real < KW-1)
-        end = t if n_real is None else n_real
-        conv_tail = jax.lax.dynamic_slice_in_dim(xr_in, end, kw - 1, axis=1)
+        end = t if n_real is None else jnp.asarray(n_real)
+        if getattr(end, "ndim", 0):             # (B,) per-sequence ends
+            idx = end[:, None] + jnp.arange(kw - 1)[None, :]    # (B, KW-1)
+            conv_tail = jnp.take_along_axis(xr_in, idx[:, :, None], axis=1)
+        else:
+            conv_tail = jax.lax.dynamic_slice_in_dim(xr_in, end, kw - 1, axis=1)
     else:
         conv_tail = None
     return tsl.matmul(y, p["out_proj"]), (h_final, conv_tail)

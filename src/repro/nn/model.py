@@ -19,6 +19,20 @@ build_model(cfg) returns a Model with a uniform surface:
         (pos: scalar, or a (B,) vector of per-slot positions — continuous
          batching; recurrent families ignore it, attention caches scatter
          per-slot)
+    verify_step(params, state, tokens, pos) -> (logits (B,SV,V), state)
+        (speculative decoding: score a span of SV = k+1 tokens per slot —
+         the pending token + k drafts — in ONE ragged batched step; logits
+         row j validates draft j+1, row j is independent of rows > j. KV
+         families write the span's cache slab and return the updated state:
+         rollback is FREE, the accepted fill just stops short of rejected
+         rows (kv_len truncation). Recurrent/hybrid families return the
+         incoming state UNCHANGED — a checkpoint.)
+    verify_commit(params, state, tokens, pos, n_commit) -> state  |  None
+        (recurrent/hybrid only — None for KV families whose verify_step
+         already committed: replay the accepted prefix of the span through
+         the chunked-prefill path with per-slot ``n_commit`` (B,) real
+         rows; n_commit == 0 is an exact identity for that slot, so
+         rejected-slot rollback never perturbs neighbor slots.)
     init_decode_state(batch, max_len) -> zeroed state pytree
     state_batch_axes(state) -> pytree of slot-axis ints (same treedef)
     insert_slot(state, donor, slot) / reset_slot(state, slot)
@@ -61,6 +75,9 @@ class Model:
     decode_step: Callable        # (params, state, tokens, pos) -> (logits, state)
     init_decode_state: Callable  # (batch, max_len, **kw) -> state
     state_batch_axes: Callable   # (state) -> pytree of slot-axis ints
+    # speculative decoding (see module docstring):
+    verify_step: Callable = None     # (params, state, tokens, pos) -> (logits, state)
+    verify_commit: Callable = None   # (params, state, tokens, pos, n_commit) -> state
 
     def forward_logits(self, params, batch, *, remat: bool = False):
         logits, _, _ = self._forward(params, batch, remat)
@@ -152,6 +169,8 @@ def build_model(cfg: ArchConfig) -> Model:
             init_decode_state=lambda b, s, **kw: lm.init_decode_state(
                 cfg, b, s, jnp.dtype(cfg.dtype)),
             state_batch_axes=lm.state_batch_axes,
+            verify_step=lambda p, st, t, pos: lm.lm_verify_step(
+                p, st, t, pos, cfg),
         )
     if fam == "hybrid":
         def fwd(params, batch, remat):
@@ -171,6 +190,10 @@ def build_model(cfg: ArchConfig) -> Model:
             init_decode_state=lambda b, s, **kw: zamba.init_zamba_state(
                 cfg, b, s, jnp.dtype(cfg.dtype)),
             state_batch_axes=zamba.state_batch_axes,
+            verify_step=lambda p, st, t, pos: zamba.zamba_verify_step(
+                p, st, t, pos, cfg),
+            verify_commit=lambda p, st, t, pos, n: zamba.zamba_prefill_chunk(
+                p, st, t, pos, cfg, n_real=n)[1],
         )
     if fam == "ssm":
         def fwd(params, batch, remat):
@@ -189,6 +212,10 @@ def build_model(cfg: ArchConfig) -> Model:
             init_decode_state=lambda b, s, **kw: rwkv_lm.init_rwkv_state(
                 cfg, b, jnp.dtype(cfg.dtype)),
             state_batch_axes=rwkv_lm.state_batch_axes,
+            verify_step=lambda p, st, t, pos: rwkv_lm.rwkv_verify_step(
+                p, st, t, cfg),
+            verify_commit=lambda p, st, t, pos, n: rwkv_lm.rwkv_prefill_chunk(
+                p, st, t, cfg, n_real=n)[1],
         )
     if fam == "audio":
         def fwd(params, batch, remat):
@@ -215,6 +242,8 @@ def build_model(cfg: ArchConfig) -> Model:
                     cfg, b, s, enc_len=s if enc_len is None else enc_len,
                     dtype=jnp.dtype(cfg.dtype)),
             state_batch_axes=encdec.state_batch_axes,
+            verify_step=lambda p, st, t, pos: encdec.encdec_verify_step(
+                p, st, t, pos, cfg),
         )
     raise ValueError(f"unknown family {fam!r}")
 

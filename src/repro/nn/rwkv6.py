@@ -57,15 +57,21 @@ def _decay(p, xw):
 
 
 def _last_real(x, n_real, prev):
-    """x (B,T,D) -> the row at index n_real-1 (B,D); n_real may be traced.
+    """x (B,T,D) -> the row at index n_real-1 (B,D); n_real may be traced and
+    may be a (B,) per-sequence vector (ragged chunks over the slot table).
 
     The token-shift carry for the NEXT chunk must be the last REAL token's
-    normed activation, not a padding row's. An ALL-padding chunk
+    normed activation, not a padding row's. An ALL-padding chunk/row
     (n_real == 0) must pass the incoming carry ``prev`` through unchanged
     (zeros on a fresh start — what token_shift pads with)."""
     if n_real is None:
         return x[:, -1]
     n_real = jnp.asarray(n_real)
+    if n_real.ndim:                     # (B,) per-sequence real lengths
+        idx = (jnp.maximum(n_real, 1) - 1)[:, None, None]
+        last = jnp.take_along_axis(x, idx, axis=1)[:, 0]
+        keep = prev if prev is not None else jnp.zeros_like(last)
+        return jnp.where(n_real[:, None] > 0, last, keep.astype(last.dtype))
     last = jnp.take(x, jnp.maximum(n_real, 1) - 1, axis=1)
     keep = prev if prev is not None else jnp.zeros_like(last)
     return jnp.where(n_real > 0, last, keep.astype(last.dtype))
@@ -74,11 +80,11 @@ def _last_real(x, n_real, prev):
 def time_mix_forward(p, x, cfg, *, prev_tok=None, s0=None, n_real=None):
     """x (B,T,D) -> (y, (last_tok, s_final)).
 
-    ``n_real`` (scalar, may be traced): positions >= n_real are padding —
-    their WKV update is forced to the identity (decay 1, key 0) so
-    ``s_final`` is exactly the state after the last real token, and
-    ``last_tok`` is gathered at n_real-1. Pad y rows are garbage the caller
-    discards (causality: they never feed a real position)."""
+    ``n_real`` (scalar or (B,) per-sequence, may be traced): positions
+    >= n_real are padding — their WKV update is forced to the identity
+    (decay 1, key 0) so ``s_final`` is exactly the state after the last real
+    token, and ``last_tok`` is gathered at n_real-1. Pad y rows are garbage
+    the caller discards (causality: they never feed a real position)."""
     bsz, t, d = x.shape
     nh, hk = dims(cfg)
     xr = tsl.token_shift(x, p["mu_r"], prev=prev_tok)
@@ -91,7 +97,9 @@ def time_mix_forward(p, x, cfg, *, prev_tok=None, s0=None, n_real=None):
     v = tsl.matmul(xv, p["wv"]).reshape(bsz, t, nh, hk)
     w = _decay(p, xw).reshape(bsz, t, nh, hk).astype(x.dtype)
     if n_real is not None:
-        valid = (jnp.arange(t) < n_real)[None, :, None, None]
+        nr = jnp.asarray(n_real)
+        nr = nr[:, None] if nr.ndim else nr     # (B,) per-sequence or scalar
+        valid = (jnp.arange(t)[None, :] < nr)[:, :, None, None]
         w = jnp.where(valid, w, jnp.ones_like(w))
         k = jnp.where(valid, k, jnp.zeros_like(k))
     g = tsl.silu(tsl.matmul(xg, p["wg"]))

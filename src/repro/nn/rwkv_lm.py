@@ -119,6 +119,20 @@ def rwkv_prefill_chunk(params, state, tokens, cfg, *, n_real=None):
     return logits, new_state
 
 
+def rwkv_verify_step(params, state, tokens, cfg):
+    """Speculative-decoding verify span, PURE scoring: tokens (B,SV) — each
+    slot's pending token + drafted continuation — are scored against the
+    carried recurrent state WITHOUT committing it. Scan states cannot be
+    truncated, so rollback is a checkpoint: the incoming state is returned
+    unchanged and the engine replays the accepted prefix through
+    :func:`rwkv_prefill_chunk` with per-slot ``n_real`` (verify_commit).
+    Causality of the recurrence makes logits row j independent of rows > j
+    (the accepted-prefix contract). Returns (logits (B,SV,V), state)."""
+    logits, _, _ = rwkv_forward(params, tokens, cfg, remat=False,
+                                collect_state=False, state=state)
+    return logits, state
+
+
 def rwkv_decode_step(params, state, tokens_t, pos, cfg):
     x = tsl.embed_lookup(params["embed"], tokens_t)
     x = apply_norm_params(cfg, params["ln_in"], x)

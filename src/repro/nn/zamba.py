@@ -22,7 +22,7 @@ def _scan(f, init, xs, **kw):
 
 
 from .attention import (attention_decode, attention_forward, attention_prefill_chunk,
-                        init_attention)
+                        attention_verify, init_attention)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .lm import lm_head
 from .mamba2 import dims as m2_dims, init_mamba2, mamba2_decode, mamba2_forward
@@ -125,12 +125,16 @@ def zamba_prefill(params, tokens, cfg, *, max_len: int):
     return lm_head(params, x, cfg)[:, 0], state
 
 
-def zamba_prefill_chunk(params, state, tokens, pos, cfg, *, n_real=None):
+def zamba_prefill_chunk(params, state, tokens, pos, cfg, *, n_real=None,
+                        attend=attention_prefill_chunk):
     """Continuation prefill of one chunk into a live hybrid decode state:
     the mamba layers carry (h, conv) forward exactly (padding rows are
     identity updates — see mamba2_forward), the shared attention block
     writes the chunk's K/V at rows [pos, pos+C) of each group's cache.
-    Returns (logits (B,C,V), new state)."""
+    ``pos``/``n_real`` may be (B,) per-slot vectors (ragged commit replay
+    over the slot table); ``attend`` swaps the shared-attn span op (the
+    verify path routes through the attention_verify primitive). Returns
+    (logits (B,C,V), new state)."""
     x = tsl.embed_lookup(params["embed"], tokens)
 
     def mamba_body(x_c, inp):
@@ -143,7 +147,7 @@ def zamba_prefill_chunk(params, state, tokens, pos, cfg, *, n_real=None):
     def group_body(x_c, inp):
         gp, h_g, conv_g, kc, vc = inp
         x_c, (h_new, conv_new) = _scan(mamba_body, x_c, (gp, h_g, conv_g))
-        a, kc, vc = attention_prefill_chunk(
+        a, kc, vc = attend(
             params["shared_attn"],
             apply_norm_params(cfg, params["shared_attn_norm"], x_c),
             kc, vc, pos, cfg)
@@ -162,6 +166,20 @@ def zamba_prefill_chunk(params, state, tokens, pos, cfg, *, n_real=None):
         new_state["conv_rest"] = conv_r
     x = apply_norm_params(cfg, params["final_norm"], x)
     return lm_head(params, x, cfg), new_state
+
+
+def zamba_verify_step(params, state, tokens, pos, cfg):
+    """Speculative-decoding verify span, PURE scoring: the SSM states cannot
+    be truncated, so the incoming state is returned UNCHANGED (checkpoint)
+    and the engine replays the accepted prefix through
+    :func:`zamba_prefill_chunk` with per-slot ``n_real`` (verify_commit) —
+    the shared-attn K/V slab writes of that replay are idempotent over what
+    this scoring pass computed and then discarded. The shared attention
+    routes through the attention_verify primitive. Returns
+    (logits (B,SV,V), state)."""
+    logits, _ = zamba_prefill_chunk(params, state, tokens, pos, cfg,
+                                    attend=attention_verify)
+    return logits, state
 
 
 def init_zamba_state(cfg, batch: int, max_len: int, dtype):

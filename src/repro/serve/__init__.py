@@ -6,7 +6,11 @@
   donor against the slot table (the insert/reset surgery itself lives on
   ``Model.insert_slot``/``reset_slot``, uniform over all four families);
 - ``engine``: the per-step continuous-batching loop (jit-stable shapes,
-  per-slot positions, TTFT / decode-t/s / SLA metrics).
+  per-slot positions, TTFT / decode-t/s / SLA metrics);
+- ``spec``: speculative decoding — drafters (n-gram prompt-lookup / small
+  draft model), the longest-accepted-prefix rule, and UPD-cost-priced
+  per-slot speculation depth (``attention_verify``'s serve block + cost
+  terms drive both the span bound and the depth decision).
 
 See README.md in this directory for the slot/state-surgery contract.
 """
@@ -14,17 +18,26 @@ See README.md in this directory for the slot/state-surgery contract.
 from .engine import SamplingConfig, ServeEngine
 from .scheduler import (BucketPolicy, CostModelAdmission, Request,
                         RequestMetrics, Scheduler, upd_serve_defaults)
-from .slots import take_slot, validate_donor
+from .slots import assert_span_fits, take_slot, validate_donor
+from .spec import (DraftModelDrafter, NGramDrafter, SpeculationConfig,
+                   SpeculationPolicy, accept_span, upd_verify_defaults)
 
 __all__ = [
     "BucketPolicy",
     "CostModelAdmission",
+    "DraftModelDrafter",
+    "NGramDrafter",
     "Request",
     "RequestMetrics",
     "SamplingConfig",
     "Scheduler",
     "ServeEngine",
+    "SpeculationConfig",
+    "SpeculationPolicy",
+    "accept_span",
+    "assert_span_fits",
     "take_slot",
     "upd_serve_defaults",
+    "upd_verify_defaults",
     "validate_donor",
 ]

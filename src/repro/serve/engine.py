@@ -24,12 +24,26 @@ reaches its arrival — TTFT and SLA accounting are measured from that arrival,
 and shared-step wall time is attributed proportionally to prefill vs decode
 tokens so a neighbour's chunk work never inflates a request's decode-t/s.
 
-Metrics per request: TTFT, prefill_s/decode_s attribution, decode tokens/s,
-end-to-end latency, SLA hit, bucket; per engine run: real-token throughput
-(padded/idle slots never counted), steady-state padded-slot steps (0 == true
-continuous batching), TTFT percentiles split by bucket, slot-reuse counts,
-the per-step log (chunks run / tokens decoded), the admission log, and every
-refusal with its cost-model reason.
+Speculative decoding (``speculation=SpeculationConfig(...)``) replaces the
+per-step decode with a draft/verify loop when the UPD cost channel says it
+pays: a drafter proposes up to k tokens per slot, ONE batched ragged verify
+step (``Model.verify_step`` over the ``attention_verify`` primitive) scores
+every slot's span at its own position, and each slot commits its longest
+accepted prefix plus one corrected token. Depth k is per-slot per-step
+(``SpeculationPolicy``: acceptance EMA vs drafter + verify roofline cost)
+and k = 0 runs the ORIGINAL decode path verbatim — same jitted function,
+same sampler, same key draws — so disabled/unprofitable speculation is
+token-for-token identical to the plain engine.
+
+Metrics per request: TTFT, prefill_s/decode_s attribution, decode tokens/s
+(counting ONLY target-emitted tokens — accepted + corrected, never rejected
+drafts), end-to-end latency, SLA hit, bucket; per engine run: real-token
+throughput (padded/idle slots never counted), steady-state padded-slot steps
+(0 == true continuous batching), TTFT percentiles split by bucket, slot-reuse
+counts, the per-step log (chunks run / tokens decoded / emitted), the
+admission log, every refusal with its cost-model reason, and — with
+speculation on — the ``spec`` block (accepted rate, mean accepted span,
+steps per emitted token, split by bucket).
 """
 
 from __future__ import annotations
@@ -45,7 +59,9 @@ from repro.nn.model import build_model
 
 from .scheduler import (BucketPolicy, CostModelAdmission, Refusal, Request,
                         Scheduler)
-from .slots import validate_donor
+from .slots import assert_span_fits, validate_donor
+from .spec import (SpeculationConfig, SpeculationPolicy, accept_span,
+                   build_drafter, upd_verify_defaults)
 
 
 @dataclass(frozen=True)
@@ -83,7 +99,8 @@ class ServeEngine:
                  sampling: SamplingConfig | None = None, seed: int = 0,
                  enc_len: int | None = None, admission: bool = True,
                  prefill_chunk: int | None = None,
-                 buckets: tuple[int, ...] | None = None):
+                 buckets: tuple[int, ...] | None = None,
+                 speculation: SpeculationConfig | None = None):
         if cfg.family == "audio" and enc_len is None:
             raise ValueError("audio family: pass enc_len (the fixed encoder "
                              "length every request's frames are sized to)")
@@ -118,6 +135,38 @@ class ServeEngine:
                                              enc_len=enc_len,
                                              policy=self.policy) \
             if admission else None
+        # -- speculative decoding (draft/verify over the slot table) ---------
+        # The verify span writes k_max+1 cache rows at each slot's fill; a
+        # slot whose window is smaller than the step's global K would have
+        # rows from NEIGHBOURS' depth written past its own budget, so the
+        # slot table (and every donor) carries k_max scratch rows of
+        # headroom beyond max_len — dynamic_update_slice clamping near the
+        # boundary would otherwise silently corrupt the last real rows.
+        self.spec = speculation
+        self._k_max = 0
+        self._drafter = None
+        self._spec_policy = None
+        self._verify = None
+        self._commit = None
+        if speculation is not None:
+            self._k_max = speculation.k_max if speculation.k_max is not None \
+                else upd_verify_defaults()["k_max"]
+            self._drafter = build_drafter(speculation, cfg, batch=batch,
+                                          state_len=max_len + self._k_max,
+                                          seed=seed + 2)
+            pricing = self.cost_model or CostModelAdmission(
+                cfg, batch, max_len, enc_len=enc_len, policy=self.policy)
+            if self.cost_model is not None:
+                self.cost_model.spec_k = self._k_max
+            self._spec_policy = SpeculationPolicy(
+                batch, self._k_max, pricing, speculation,
+                drafter_cost_s=self._drafter.cost_per_token_s())
+            self._verify = jax.jit(self.model.verify_step,
+                                   donate_argnums=(1,))
+            if self.model.verify_commit is not None:
+                self._commit = jax.jit(self.model.verify_commit,
+                                       donate_argnums=(1,))
+        self._state_len = max_len + self._k_max
         # donate the incoming state: it is dead after every call, and without
         # donation each step/insert/reset copies the full multi-layer cache
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
@@ -144,33 +193,45 @@ class ServeEngine:
         return last, donor
 
     def _build_sampler(self):
-        temp, top_k = self.sampling.temperature, self.sampling.top_k
+        """Per-slot-temperature sampler: ``temps`` (B,) lets greedy and
+        sampled requests coexist in one batched step (and in one verify
+        span, where logits are (B, SV, V) and every span row samples at its
+        slot's temperature). temp <= 0 rows take the argmax; for a uniform
+        temperature this reduces exactly to the scalar sampler (same key,
+        same categorical draw)."""
+        top_k = self.sampling.top_k
         vocab = self.cfg.vocab
 
-        def mask_padding(logits):
+        def sample(logits, key, temps):
             # the lm head is padded_vocab wide: never emit a padding id
             keep = jnp.arange(logits.shape[-1]) < vocab
-            return jnp.where(keep, logits, jnp.full_like(logits, -1e30))
-
-        if temp <= 0.0:
-            def sample(logits, key):
-                return jnp.argmax(mask_padding(logits), axis=-1)
-        else:
-            def sample(logits, key):
-                scaled = mask_padding(logits).astype(jnp.float32) / temp
-                if top_k:
-                    kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
-                    scaled = jnp.where(scaled < kth, jnp.float32(-1e30), scaled)
-                return jax.random.categorical(key, scaled, axis=-1)
+            masked = jnp.where(keep, logits, jnp.full_like(logits, -1e30))
+            greedy = jnp.argmax(masked, axis=-1)
+            t = temps.reshape((logits.shape[0],) + (1,) * (logits.ndim - 1))
+            scaled = masked.astype(jnp.float32) / jnp.maximum(t, 1e-6)
+            if top_k:
+                kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]
+                scaled = jnp.where(scaled < kth, jnp.float32(-1e30), scaled)
+            drawn = jax.random.categorical(key, scaled, axis=-1)
+            use_draw = temps.reshape(
+                (logits.shape[0],) + (1,) * (logits.ndim - 2)) > 0
+            return jnp.where(use_draw, drawn, greedy)
 
         return jax.jit(sample)
+
+    def _slot_temperature(self, req: Request) -> float:
+        return self.sampling.temperature if req.temperature is None \
+            else float(req.temperature)
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
         return sub
 
     def _init_state(self):
-        return self.model.init_decode_state(self.batch, self.max_len,
+        # _state_len = max_len + k_max: verify-span slab headroom (see
+        # __init__) — admission and the overrun guards still cap real fill
+        # at max_len, the scratch rows only ever hold rejected drafts
+        return self.model.init_decode_state(self.batch, self._state_len,
                                             enc_len=self.enc_len)
 
     def _first_chunk_embeds(self, req: Request):
@@ -199,7 +260,12 @@ class ServeEngine:
             except Exception:
                 return -1
 
-        return {"prefill_chunk": sz(self._chunk), "decode": sz(self._decode)}
+        sizes = {"prefill_chunk": sz(self._chunk), "decode": sz(self._decode)}
+        if self._verify is not None:
+            sizes["verify"] = sz(self._verify)
+        if self._commit is not None:
+            sizes["commit"] = sz(self._commit)
+        return sizes
 
     # -- async ingestion ------------------------------------------------------
 
@@ -227,8 +293,15 @@ class ServeEngine:
             sched.submit(r, now())
 
         state = self._init_state()
-        tokens = jnp.zeros((self.batch, 1), jnp.int32)
+        # host mirrors of per-slot decode-loop state: the pending token
+        # (emitted but not yet consumed by the model), the cache fill, the
+        # sampling temperature, and — for the drafter — the committed token
+        # history (prompt + emitted)
+        pending_host = np.zeros(self.batch, np.int64)
         pos_host = np.zeros(self.batch, np.int64)
+        temps_host = np.full(self.batch, self.sampling.temperature,
+                             np.float32)
+        histories: dict[int, list[int]] = {}
         outputs: dict[str, list[int]] = {}
         tasks: list[_PrefillTask] = []
         step_log: list[dict] = []
@@ -236,6 +309,13 @@ class ServeEngine:
         padded_steady = 0
         generated = 0
         prefill_tokens_total = 0
+        decode_emitted = 0          # tokens emitted by phase-2 steps
+        slot_steps = 0              # per-slot phase-2 participations
+        decode_steps = 0            # plain (k=0) decode steps
+        verify_steps = 0            # speculative verify rounds
+        spec_proposed_total = 0
+        spec_accepted_total = 0
+        spec_slot_rounds = 0        # (slot, round) pairs that speculated
         chunk = self.policy.chunk
 
         seen_rids = set(rids)
@@ -282,7 +362,7 @@ class ServeEngine:
                     req=req, slot=free[0], padded=padded,
                     n_chunks=bucket // chunk,
                     donor=self.model.init_decode_state(
-                        1, self.max_len, enc_len=self.enc_len)))
+                        1, self._state_len, enc_len=self.enc_len)))
                 sched.reserve(free[0], req, step)
 
             # -- unified step, phase 1: one chunk per in-flight prefill ------
@@ -301,6 +381,12 @@ class ServeEngine:
                 last, task.donor = self._chunk(
                     self.params, task.donor, seg,
                     jnp.int32(task.fill), jnp.int32(n_real), embeds)
+                if self._drafter is not None:
+                    # a draft-model drafter mirrors the chunk schedule into
+                    # its own donor (no-op for the n-gram drafter)
+                    self._drafter.on_chunk(task.req.rid,
+                                           task.padded[:, c0:c0 + chunk],
+                                           n_real)
                 task.chunk_idx += 1
                 ran.append(task)
                 if task.chunk_idx == 1:
@@ -320,7 +406,8 @@ class ServeEngine:
                 # here instead of silently regressing
                 padded_steady += self.batch - len(active) - len(tasks)
 
-            # -- phase 2: one decode step over every occupied slot -----------
+            # -- phase 2: one decode OR verify step over every occupied slot -
+            emitted_this_step = 0
             if active:
                 if int(pos_host[active].max()) >= self.max_len:
                     # reachable only with admission=False (admission's
@@ -329,22 +416,101 @@ class ServeEngine:
                     raise RuntimeError(
                         f"active slot position {int(pos_host[active].max())} "
                         f"overran max_len={self.max_len}")
+                # per-slot speculation depth, priced per step: clipped to the
+                # slot's remaining generation budget, 0 when the cost channel
+                # says drafting doesn't pay (or speculation is off)
+                k_vec = np.zeros(self.batch, np.int64)
+                if self._spec_policy is not None:
+                    for slot in active:
+                        s_ = sched.slots[slot]
+                        remaining = s_.request.gen_len - s_.metrics.tokens_out
+                        k_vec[slot] = self._spec_policy.depth(
+                            slot, int(pos_host[slot]), remaining)
+                K = int(k_vec.max())
                 pos_vec = jnp.asarray(pos_host, jnp.int32)
-                logits, state = self._decode(self.params, state, tokens,
-                                             pos_vec)
-                toks = np.asarray(self._sample(logits, self._next_key()))
-                tokens = jnp.asarray(toks[:, None], jnp.int32)
-                for slot in active:
-                    rid = sched.slots[slot].request.rid
-                    sched.step_done(slot)
-                    pos_host[slot] += 1
-                    outputs[rid].append(int(toks[slot]))
-                    generated += 1
+                temps = jnp.asarray(temps_host)
+                if K == 0:
+                    # degraded path: EXACTLY today's decode step — same jitted
+                    # fn, same sampler call, same key draw — so k=0
+                    # speculation is token-for-token identical to PR 5 decode
+                    tokens = jnp.asarray(pending_host[:, None], jnp.int32)
+                    logits, state = self._decode(self.params, state, tokens,
+                                                 pos_vec)
+                    toks = np.asarray(self._sample(logits, self._next_key(),
+                                                   temps))
+                    decode_steps += 1
+                    for slot in active:
+                        rid = sched.slots[slot].request.rid
+                        sched.step_done(slot)
+                        pos_host[slot] += 1
+                        pending_host[slot] = int(toks[slot])
+                        outputs[rid].append(int(toks[slot]))
+                        if slot in histories:
+                            histories[slot].append(int(toks[slot]))
+                        generated += 1
+                        emitted_this_step += 1
+                else:
+                    # speculative round: draft -> ONE ragged batched verify ->
+                    # accept longest prefix + corrected token -> commit
+                    drafts = self._drafter.propose(active, histories, k_vec,
+                                                   self.batch, K)
+                    span_np = np.concatenate(
+                        [pending_host[:, None], drafts], axis=1)
+                    # the whole table takes the slab write (inactive rows
+                    # included), so the guard covers every slot's position
+                    assert_span_fits(pos_host, K + 1, self._state_len)
+                    span = jnp.asarray(span_np, jnp.int32)
+                    logits, state = self._verify(self.params, state, span,
+                                                 pos_vec)
+                    # sample the target token at EVERY span row (per-slot
+                    # temperature); row j validates draft j+1, row m yields
+                    # the corrected token for a slot accepting m drafts
+                    tgt = np.asarray(self._sample(logits, self._next_key(),
+                                                  temps))
+                    m_vec = accept_span(drafts, tgt, k_vec)
+                    n_commit = np.zeros(self.batch, np.int64)
+                    for slot in active:
+                        n_commit[slot] = m_vec[slot] + 1
+                    if self._commit is not None:
+                        # recurrent/hybrid: replay the accepted prefix of the
+                        # span through the chunked-prefill path (per-slot
+                        # n_commit real rows; 0 == exact identity, so
+                        # rejected or inactive slots are never perturbed)
+                        state = self._commit(
+                            self.params, state, span, pos_vec,
+                            jnp.asarray(n_commit, jnp.int32))
+                    verify_steps += 1
+                    for slot in active:
+                        rid = sched.slots[slot].request.rid
+                        m = int(m_vec[slot])
+                        emit = [int(t) for t in drafts[slot, :m]]
+                        emit.append(int(tgt[slot, m]))
+                        sched.step_done(slot, n=len(emit))
+                        if k_vec[slot] > 0:
+                            sched.spec_round(slot, proposed=int(k_vec[slot]),
+                                             accepted=m)
+                            self._spec_policy.update(slot, int(k_vec[slot]),
+                                                     m)
+                            spec_proposed_total += int(k_vec[slot])
+                            spec_accepted_total += m
+                            spec_slot_rounds += 1
+                        pos_host[slot] += len(emit)
+                        pending_host[slot] = emit[-1]
+                        outputs[rid].extend(emit)
+                        if slot in histories:
+                            histories[slot].extend(emit)
+                        if self._drafter is not None:
+                            self._drafter.on_commit(slot, m)
+                        generated += len(emit)
+                        emitted_this_step += len(emit)
 
             # -- phase 3: shared-step time attribution (prefill vs decode) ---
+            decode_emitted += emitted_this_step
+            slot_steps += len(active)
             t_step = time.perf_counter() - t_step0
-            pre_share, _ = sched.attribute_step_time(t_step, chunk_tokens,
-                                                     active)
+            pre_share, _ = sched.attribute_step_time(
+                t_step, chunk_tokens, active,
+                decode_tokens=emitted_this_step)
             for task in ran:
                 task.prefill_s += pre_share / max(len(ran), 1)
 
@@ -352,7 +518,8 @@ class ServeEngine:
                 step_log.append({"step": step,
                                  "prefill_rids": [t.req.rid for t in ran],
                                  "chunks": len(ran),
-                                 "decoded": len(active)})
+                                 "decoded": len(active),
+                                 "emitted": emitted_this_step})
 
             # -- phase 4: completions (finished prefills + finished decodes) -
             for task in list(tasks):
@@ -360,9 +527,11 @@ class ServeEngine:
                     continue
                 # prefill complete: graft the donor into its reserved slot,
                 # sample the first token, occupy
-                first = int(np.asarray(self._sample(
-                    jnp.asarray(task.first_logits), self._next_key()))[0])
                 slot = task.slot
+                temps_host[slot] = self._slot_temperature(task.req)
+                first = int(np.asarray(self._sample(
+                    jnp.asarray(task.first_logits), self._next_key(),
+                    jnp.asarray(temps_host[slot:slot + 1])))[0])
                 validate_donor(state, task.donor,
                                self.model.state_batch_axes(state))
                 state = self._insert(state, task.donor, slot)
@@ -371,16 +540,29 @@ class ServeEngine:
                 sched.first_token(slot, now())
                 generated += 1
                 outputs[task.req.rid] = [first]
-                tokens = tokens.at[slot, 0].set(first)
+                pending_host[slot] = first
                 pos_host[slot] = task.fill
+                # committed token history (prompt + emitted): the drafter's
+                # lookup corpus, reset on every slot reuse
+                histories[slot] = [int(t) for t in
+                                   np.asarray(task.req.tokens)] + [first]
+                if self._spec_policy is not None:
+                    self._spec_policy.reset(slot)
+                if self._drafter is not None:
+                    self._drafter.on_graft(task.req.rid, slot,
+                                           histories[slot])
                 tasks.remove(task)
                 if sched.slot_done(slot):           # gen_len == 1 edge case
                     sched.finish(slot, now())
                     state = self._reset(state, slot)
+                    if self._drafter is not None:
+                        self._drafter.on_finish(slot)
             for slot in list(active):
                 if sched.slot_done(slot):
                     sched.finish(slot, now())
                     state = self._reset(state, slot)
+                    if self._drafter is not None:
+                        self._drafter.on_finish(slot)
 
             if ran or active:
                 step += 1           # a unified step actually did device work
@@ -435,5 +617,47 @@ class ServeEngine:
                 "step_seconds": self.cost_model.step_seconds(),
                 "prefill_seconds_largest_bucket":
                     self.cost_model.prefill_seconds(self.policy.buckets[-1]),
+            }
+            if self.spec is not None:
+                report["cost_model"]["verify_seconds_k_max"] = \
+                    self.cost_model.verify_seconds(self._k_max)
+        if self.spec is not None:
+            # accepted-token rate + mean accepted span, overall and by bucket
+            by_b: dict[int, list[int]] = {}
+            for m in finished:
+                acc = by_b.setdefault(m.bucket, [0, 0, 0, 0])
+                acc[0] += 1
+                acc[1] += m.spec_proposed
+                acc[2] += m.spec_accepted
+                acc[3] += m.verify_rounds
+            accept_by_bucket = {
+                b: {"n": n, "proposed": p, "accepted": a,
+                    "accepted_rate": a / max(p, 1),
+                    # each speculating round emits accepted + 1 corrected
+                    "mean_accepted_span": (a + r) / max(r, 1)}
+                for b, (n, p, a, r) in sorted(by_b.items())
+            }
+            report["spec"] = {
+                "drafter": self.spec.drafter,
+                "k_max": self._k_max,
+                "decode_steps": decode_steps,
+                "verify_steps": verify_steps,
+                "drafted_tokens": spec_proposed_total,
+                "accepted_tokens": spec_accepted_total,
+                "accepted_rate":
+                    spec_accepted_total / max(spec_proposed_total, 1),
+                "mean_accepted_span":
+                    (spec_accepted_total + spec_slot_rounds)
+                    / max(spec_slot_rounds, 1),
+                # the speedup headline: < 1.0 means speculation emitted more
+                # tokens than it ran phase-2 device steps
+                "steps_per_emitted_token":
+                    (decode_steps + verify_steps) / max(decode_emitted, 1),
+                # batching-independent version: per-SLOT step participations
+                # per emitted token — exactly 1.0 for plain decode, < 1.0
+                # iff verify rounds accepted drafts
+                "slot_steps_per_emitted_token":
+                    slot_steps / max(decode_emitted, 1),
+                "accept_by_bucket": accept_by_bucket,
             }
         return report

@@ -152,6 +152,10 @@ class Request:
                                     # vision / audio (enc_len, D) frames
     arrival_s: float = 0.0          # preset (trace) or stamped by submit
     bucket: int = 0                 # stamped at admission (BucketPolicy)
+    temperature: float | None = None  # per-request override of the engine's
+                                      # SamplingConfig (<=0 -> greedy); mixed
+                                      # greedy/sampled slots coexist in one
+                                      # batched step / verify span
 
     @property
     def prompt_len(self) -> int:
@@ -176,6 +180,12 @@ class RequestMetrics:
     sla_s: float | None = None
     sla_met: bool | None = None     # None: no SLA attached
     admitted_at_step: int = -1      # engine step index at slot reservation
+    # speculative decoding: tokens_out / decode_tokens_per_s count ONLY
+    # target-model-emitted tokens (accepted drafts + the corrected token);
+    # rejected drafts are never billed as output
+    spec_proposed: int = 0          # draft tokens proposed for this request
+    spec_accepted: int = 0          # draft tokens accepted by the target
+    verify_rounds: int = 0          # verify steps this request took part in
 
 
 @dataclass
@@ -217,6 +227,11 @@ class CostModelAdmission:
             active_only=(cfg.family == "moe")) * self._dtype_bytes()
         self._attn_layers = self._n_attn_layers()
         self._step_s = None         # computed lazily, cached (pure shapes)
+        # speculative decoding: the engine sets spec_k > 0 when a drafter is
+        # attached; admission then prices decode at the BEST-CASE emitted
+        # tokens per second across plain decode and a fully-accepted verify
+        # span (roofline admission stays best-case, so refusal stays sound)
+        self.spec_k = 0
 
     def _dtype_bytes(self) -> int:
         return 2 if "16" in self.cfg.dtype else 4
@@ -276,6 +291,53 @@ class CostModelAdmission:
             self._step_s = self.decode_bytes_per_step() / HBM_BW
         return self._step_s
 
+    def verify_seconds(self, k: int, s: int | None = None) -> float:
+        """Best-case time of ONE ragged verify step at draft depth k (span
+        SV = k+1) over the full slot table: memory-bound like decode —
+        param bytes stream once regardless of span width, plus the
+        ``attention_verify`` UPD bytes term per attention layer. Recurrent
+        and hybrid families pay the commit replay (the accepted prefix runs
+        through the chunked-prefill path), modeled as a factor of 2. This is
+        the price the SpeculationPolicy weighs against expected accepted
+        tokens when choosing a per-slot depth."""
+        cfg = self.cfg
+        sv = int(k) + 1
+        s_eff = self.max_len if s is None else s
+
+        def per_layer(s_: int) -> float:
+            shapes = dict(B=self.batch, H=cfg.n_heads, KH=cfg.n_kv_heads,
+                          SV=sv, S=s_, D=cfg.hd)
+            try:
+                from repro.tsl_api import cost
+                raw = cost("attention_verify", "bytes", **shapes)
+            except KeyError:
+                _cost_fallback_warn("attention_verify", "bytes")
+                raw = 2.0 * shapes["B"] * (
+                    2 * shapes["KH"] * shapes["S"] + 2 * shapes["H"] * sv
+                ) * shapes["D"]
+            return raw * (self._dtype_bytes() / 2.0)
+
+        attn = 0.0
+        if self._attn_layers:
+            if cfg.family == "audio":
+                enc = self.enc_len if self.enc_len is not None else s_eff
+                attn = cfg.n_layers * (per_layer(s_eff) + per_layer(enc))
+            else:
+                attn = self._attn_layers * per_layer(s_eff)
+        commit_factor = 2.0 if cfg.family in ("ssm", "hybrid") else 1.0
+        return (self.param_bytes + attn) / HBM_BW * commit_factor
+
+    def emit_seconds_per_token(self, s: int | None = None) -> float:
+        """Best-case seconds per EMITTED token: plain decode, or — when the
+        engine runs speculation — a fully-accepted verify span at spec_k
+        (k+1 tokens per step), whichever is cheaper."""
+        per_tok = self.step_seconds(s)
+        if self.spec_k > 0:
+            per_tok = min(per_tok,
+                          self.verify_seconds(self.spec_k, s)
+                          / (self.spec_k + 1))
+        return per_tok
+
     def prefill_seconds(self, padded_len: int) -> float:
         """Best-case prefill time for ``padded_len`` prompt tokens: parameter
         flops + the attention_prefill_chunk cost term summed over the chunk
@@ -322,7 +384,7 @@ class CostModelAdmission:
             # refused on traffic it will never generate
             s_req = self.prefix + bucket + req.gen_len
             projected = (waited + self.prefill_seconds(bucket)
-                         + req.gen_len * self.step_seconds(s_req))
+                         + req.gen_len * self.emit_seconds_per_token(s_req))
             if projected > req.sla_s:
                 return False, (f"sla_infeasible: projected {projected:.3e}s "
                                f"> sla {req.sla_s:.3e}s")
@@ -452,8 +514,18 @@ class Scheduler:
         m.ttft_s = max(now_s - self.slots[slot].request.arrival_s, 1e-9)
         m.tokens_out = 1
 
-    def step_done(self, slot: int) -> None:
-        self.slots[slot].metrics.tokens_out += 1
+    def step_done(self, slot: int, n: int = 1) -> None:
+        """``n`` target-model-emitted tokens landed in this slot this step
+        (n > 1: a verify round accepted n-1 drafts + the corrected token;
+        rejected drafts are never counted)."""
+        self.slots[slot].metrics.tokens_out += n
+
+    def spec_round(self, slot: int, proposed: int, accepted: int) -> None:
+        """Account one verify round for this slot's request."""
+        m = self.slots[slot].metrics
+        m.spec_proposed += proposed
+        m.spec_accepted += accepted
+        m.verify_rounds += 1
 
     def slot_done(self, slot: int) -> bool:
         s = self.slots[slot]
@@ -461,16 +533,22 @@ class Scheduler:
                 and s.metrics.tokens_out >= s.request.gen_len)
 
     def attribute_step_time(self, t_step: float, prefill_tokens: int,
-                            decode_slots: list[int]) -> tuple[float, float]:
+                            decode_slots: list[int],
+                            decode_tokens: int | None = None
+                            ) -> tuple[float, float]:
         """Split one shared step's wall time proportionally between the
-        prefill tokens (chunk work) and decode tokens (one per active slot)
-        it processed. The decode share is credited to EVERY decoding
-        request's ``decode_s`` (wall time is shared, not divided — each
-        request waited the full decode window); the prefill share is
+        prefill tokens (chunk work) and decode tokens it processed
+        (``decode_tokens`` defaults to one per active slot; a speculative
+        verify round passes the EMITTED count — accepted + corrected — so
+        the split tracks real output). The decode share is credited to EVERY
+        decoding request's ``decode_s`` (wall time is shared, not divided —
+        each request waited the full decode window); the prefill share is
         returned for the engine to credit the prefilling request(s).
         Without this split, a long prompt's chunks would silently inflate
         its neighbours' reported decode-t/s denominators."""
-        total = prefill_tokens + len(decode_slots)
+        if decode_tokens is None:
+            decode_tokens = len(decode_slots)
+        total = prefill_tokens + decode_tokens
         if total == 0 or t_step <= 0:
             return 0.0, 0.0
         pre_share = t_step * prefill_tokens / total

@@ -34,6 +34,28 @@ def take_slot(state, axes, slot: int):
     return jax.tree.map(tk, state, axes)
 
 
+def assert_span_fits(pos, span: int, state_len: int) -> None:
+    """Raise RuntimeError if any slot's span write [pos, pos+span) would
+    overrun the state's row capacity.
+
+    ``jax.lax.dynamic_update_slice`` CLAMPS an out-of-range start index
+    instead of erroring, so a verify slab launched too close to the end of
+    the cache would silently slide backwards and rewrite the last committed
+    rows — the worst kind of corruption, visible only as wrong tokens much
+    later. The engine sizes its slot table with ``k_max`` headroom rows
+    beyond max_len precisely so this never fires; this guard keeps the
+    invariant loud if a future scheduling change breaks it."""
+    import numpy as np
+
+    pos = np.asarray(pos)
+    hi = int(pos.max()) + int(span) if pos.size else 0
+    if hi > state_len:
+        raise RuntimeError(
+            f"span write [{int(pos.max())}, {hi}) overruns the state's "
+            f"{state_len} rows — dynamic_update_slice would clamp and "
+            f"corrupt committed cache rows")
+
+
 def validate_donor(state, donor, axes) -> None:
     """Raise ValueError unless ``donor`` is shape-compatible with one slot of
     ``state``: identical leaves except the slot axis, which must be 1.

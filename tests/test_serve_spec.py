@@ -1,0 +1,321 @@
+"""Speculative decoding on the slot table (ISSUE 7).
+
+Covers: the longest-accepted-prefix acceptance rule (hypothesis properties:
+accepted spans are prefixes, drafter==target implies full acceptance);
+greedy speculative decode emitting token-for-token what plain decode emits on
+all four decode families + vlm — including mid-stream slot reuse and chunked
+prefill continuation under speculation; an oracle drafter driving FULL
+acceptance (exercising the recurrent families' commit replay at multi-token
+n_commit); k=0 exact degradation (token-for-token identical even for sampled
+requests — same key draws); the engine-reported steps-per-emitted-token
+dropping below 1.0 on a repetitive workload; per-request speculation
+accounting (only target-emitted tokens counted); the UPD-declared span bound;
+and the cost-priced depth policy's degenerate cases.
+"""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs import get_config
+from repro.launch.roofline import HBM_BW
+from repro.serve import (NGramDrafter, Request, ServeEngine,
+                         SpeculationConfig, SpeculationPolicy, accept_span,
+                         upd_verify_defaults)
+from repro.serve.scheduler import CostModelAdmission
+
+FAMILIES = [("qwen1.5-0.5b", None),    # dense lm (KV rollback)
+            ("rwkv6-7b", None),        # ssm (checkpoint + commit replay)
+            ("zamba2-7b", None),       # hybrid (checkpoint + commit replay)
+            ("whisper-tiny", 8),       # audio encdec (KV + fixed cross K/V)
+            ("internvl2-2b", None)]    # vlm (KV + vision prefix positions)
+
+REPETITIVE = [5, 6, 7, 8, 5, 6, 7, 8, 5, 6]
+
+
+def _engine_kwargs(cfg, enc_len):
+    return {"enc_len": enc_len} if cfg.family == "audio" else {}
+
+
+def _requests(cfg, enc_len):
+    """Three requests over a 2-slot table: multi-chunk prompt (chunked
+    continuation), a random prompt, and a third that must wait for a freed
+    slot (mid-stream slot reuse)."""
+    rnd = np.random.default_rng(0).integers(1, cfg.vocab, 5)
+    reqs = [Request(rid="a", tokens=np.array(REPETITIVE), gen_len=9),
+            Request(rid="b", tokens=rnd, gen_len=6),
+            Request(rid="c", tokens=np.array(REPETITIVE[:7]), gen_len=8)]
+    if cfg.family == "audio":
+        rng = np.random.default_rng(1)
+        for r in reqs:
+            r.embeds = rng.standard_normal(
+                (enc_len, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        rng = np.random.default_rng(1)
+        for r in reqs:
+            r.embeds = rng.standard_normal(
+                (cfg.vision_prefix, cfg.d_model)).astype(np.float32)
+    return reqs
+
+
+# -- the acceptance rule (pure function, hypothesis properties) ----------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_accept_span_is_a_prefix(k, b, seed):
+    """For arbitrary drafts/targets/windows: m <= window, every accepted
+    draft matches its validating target row, and m stops at the first
+    mismatch (or the window, or the full span) — never beyond."""
+    rng = np.random.default_rng(seed)
+    drafts = rng.integers(0, 4, (b, k))        # tiny alphabet: real matches
+    target = rng.integers(0, 4, (b, k + 1))
+    window = rng.integers(0, k + 3, b)
+    m = accept_span(drafts, target, window)
+    for i in range(b):
+        mi = int(m[i])
+        assert 0 <= mi <= min(window[i], k)
+        assert (drafts[i, :mi] == target[i, :mi]).all()
+        if mi < min(window[i], k):                  # stopped at a mismatch
+            assert drafts[i, mi] != target[i, mi]
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 6), st.integers(1, 4), st.integers(0, 2 ** 31 - 1))
+def test_accept_span_full_acceptance_when_drafter_matches_target(k, b, seed):
+    """drafter == target  =>  every draft inside the window is accepted."""
+    rng = np.random.default_rng(seed)
+    target = rng.integers(0, 50, (b, k + 1))
+    window = rng.integers(0, k + 1, b)
+    m = accept_span(target[:, :k], target, window)
+    assert (m == np.minimum(window, k)).all()
+
+
+# -- greedy speculative == plain decode, all families --------------------------
+
+
+@pytest.mark.parametrize("arch,enc_len", FAMILIES)
+def test_greedy_speculative_identical(arch, enc_len):
+    """ISSUE 7 acceptance: greedy speculative output is identical to
+    non-speculative output on every decode family — including a request
+    admitted mid-stream into a reused slot (whose cache rows beyond the old
+    fill hold rejected-draft garbage) and multi-chunk prefill continuation
+    running while neighbours speculate."""
+    import jax
+
+    jax.clear_caches()
+    cfg = get_config(arch).reduced()
+    kw = _engine_kwargs(cfg, enc_len)
+    plain = ServeEngine(cfg, batch=2, max_len=48, admission=False, seed=0,
+                        **kw).run(_requests(cfg, enc_len))
+    spec = ServeEngine(cfg, batch=2, max_len=48, admission=False, seed=0,
+                       speculation=SpeculationConfig(fixed_k=3),
+                       **kw).run(_requests(cfg, enc_len))
+    assert plain["outputs"] == spec["outputs"]
+    assert spec["spec"]["verify_steps"] > 0
+    # slot reuse really happened (3 requests over 2 slots)
+    assert sum(spec["slot_reuse"]) == 3
+    # every request's tokens_out counts exactly its emitted tokens
+    for m in spec["per_request"]:
+        assert m["tokens_out"] == len(spec["outputs"][m["rid"]])
+
+
+class _OracleDrafter:
+    """Test-only drafter that replays the plain engine's recorded greedy
+    outputs as drafts — by construction drafter == target, so every
+    in-window draft must be accepted. Drives the recurrent families'
+    verify_commit at multi-token n_commit."""
+
+    def __init__(self, outputs, prompt_lens):
+        self.outputs = outputs
+        self.prompt_lens = prompt_lens
+        self.slot_rid = {}
+
+    def cost_per_token_s(self):
+        return 0.0
+
+    def on_chunk(self, rid, seg, n_real):
+        pass
+
+    def on_graft(self, rid, slot, history):
+        self.slot_rid[slot] = rid
+
+    def on_commit(self, slot, m):
+        pass
+
+    def on_finish(self, slot):
+        pass
+
+    def propose(self, active, histories, k_vec, batch, K):
+        drafts = np.zeros((batch, K), np.int64)
+        for slot in active:
+            rid = self.slot_rid[slot]
+            done = len(histories[slot]) - self.prompt_lens[rid]
+            fut = list(self.outputs[rid][done:done + K])
+            drafts[slot, :] = fut + [0] * (K - len(fut))
+        return drafts
+
+
+@pytest.mark.parametrize("arch,enc_len", [("qwen1.5-0.5b", None),
+                                          ("rwkv6-7b", None),
+                                          ("zamba2-7b", None)])
+def test_oracle_drafter_fully_accepts(arch, enc_len):
+    """With a drafter that proposes exactly what the target will emit, every
+    verify round accepts its whole window (rate 1.0) and the engine emits
+    k+1 tokens per slot-step — the per-slot steps-per-emitted-token drops to
+    ~1/(k+1). On ssm/hybrid this hammers the commit replay with n_commit up
+    to k+1 real rows per slot."""
+    import jax
+
+    jax.clear_caches()
+    cfg = get_config(arch).reduced()
+    kw = _engine_kwargs(cfg, enc_len)
+    plain = ServeEngine(cfg, batch=2, max_len=48, admission=False, seed=0,
+                        **kw).run(_requests(cfg, enc_len))
+    eng = ServeEngine(cfg, batch=2, max_len=48, admission=False, seed=0,
+                      speculation=SpeculationConfig(fixed_k=3), **kw)
+    eng._drafter = _OracleDrafter(
+        plain["outputs"],
+        {r.rid: r.prompt_len for r in _requests(cfg, enc_len)})
+    rep = eng.run(_requests(cfg, enc_len))
+    assert rep["outputs"] == plain["outputs"]
+    assert rep["spec"]["accepted_rate"] == 1.0
+    assert rep["spec"]["slot_steps_per_emitted_token"] < 0.5
+    assert rep["spec"]["accept_by_bucket"]
+    for stats in rep["spec"]["accept_by_bucket"].values():
+        assert stats["accepted_rate"] == 1.0
+        assert stats["mean_accepted_span"] > 1.0
+
+
+# -- k = 0 degrades to exactly today's decode ----------------------------------
+
+
+@pytest.mark.parametrize("arch,enc_len", FAMILIES[:4])
+def test_k0_is_token_for_token_identical(arch, enc_len):
+    """fixed_k=0 runs the ORIGINAL decode path (same jitted fn, same sampler
+    call, same key draws): outputs are identical to the plain engine even
+    for SAMPLED requests — mixed greedy/sampled in one batch."""
+    import jax
+
+    jax.clear_caches()
+    cfg = get_config(arch).reduced()
+    kw = _engine_kwargs(cfg, enc_len)
+
+    def mk():
+        reqs = _requests(cfg, enc_len)
+        reqs[1].temperature = 0.9           # one sampled slot amid greedy
+        return reqs
+
+    plain = ServeEngine(cfg, batch=2, max_len=48, admission=False, seed=0,
+                        **kw).run(mk())
+    spec = ServeEngine(cfg, batch=2, max_len=48, admission=False, seed=0,
+                       speculation=SpeculationConfig(fixed_k=0),
+                       **kw).run(mk())
+    assert plain["outputs"] == spec["outputs"]
+    assert spec["spec"]["verify_steps"] == 0
+    assert spec["spec"]["decode_steps"] > 0
+    assert spec["spec"]["slot_steps_per_emitted_token"] == 1.0
+
+
+# -- the speedup headline ------------------------------------------------------
+
+
+def test_steps_per_emitted_token_below_one_on_repetitive_workload():
+    """ISSUE 7 acceptance: on a repetitive workload the engine-reported
+    decode steps per emitted token drops below 1.0 (both the raw and the
+    batching-independent per-slot variant)."""
+    import jax
+
+    jax.clear_caches()
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    rep = ServeEngine(
+        cfg, batch=2, max_len=48, admission=False, seed=0,
+        speculation=SpeculationConfig(fixed_k=3)).run(
+            [Request(rid="a", tokens=np.array(REPETITIVE), gen_len=12),
+             Request(rid="c", tokens=np.array(REPETITIVE[:7]), gen_len=10)])
+    assert rep["spec"]["accepted_rate"] > 0
+    assert rep["spec"]["steps_per_emitted_token"] < 1.0
+    assert rep["spec"]["slot_steps_per_emitted_token"] < 1.0
+    # decode-t/s denominators count only target-emitted tokens
+    for m in rep["per_request"]:
+        assert m["tokens_out"] == len(rep["outputs"][m["rid"]])
+        assert m["spec_proposed"] >= m["spec_accepted"]
+
+
+# -- drafters ------------------------------------------------------------------
+
+
+def test_ngram_drafter_prompt_lookup():
+    """The n-gram drafter continues the longest matched suffix from its
+    earlier occurrence (prompt-lookup decoding), falling back to
+    repeat-last."""
+    d = NGramDrafter(max_ngram=3)
+    # suffix [7, 8] occurred earlier, followed by [9, 1]
+    hist = np.array([5, 7, 8, 9, 1, 2, 7, 8])
+    assert d._continue(hist, 2) == [9, 1]
+    assert d._continue(hist, 4) == [9, 1, 2, 7]
+    # no recurrence: repeat the last token
+    assert d._continue(np.array([1, 2, 3]), 3) == [3, 3, 3]
+    # batched proposal fills only slots with a positive window
+    drafts = d.propose([0], {0: [5, 6, 5, 6], 1: [9]},
+                       np.array([2, 0]), 2, 2)
+    assert drafts[0].tolist() == [5, 6]
+    assert drafts[1].tolist() == [0, 0]
+
+
+# -- UPD span bound + cost-priced depth ----------------------------------------
+
+
+def test_k_max_comes_from_upd_serve_block():
+    d = upd_verify_defaults()
+    assert d["k_max"] == 4
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    eng = ServeEngine(cfg, batch=2, max_len=48, admission=False,
+                      speculation=SpeculationConfig())
+    assert eng._k_max == d["k_max"]
+    # the slot table carries k_max headroom rows for neighbour-depth slabs
+    assert eng._state_len == 48 + d["k_max"]
+
+
+def test_policy_depth_degenerate_and_priced():
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    cm = CostModelAdmission(cfg, batch=2, max_len=48)
+    pol = SpeculationPolicy(2, 4, cm, SpeculationConfig(ema_init=0.6))
+    # last token of the budget: never draft past gen_len
+    assert pol.depth(0, fill=10, remaining=1) == 0
+    # fixed_k clips to both k_max and the remaining budget
+    fixed = SpeculationPolicy(2, 4, cm, SpeculationConfig(fixed_k=3))
+    assert fixed.depth(0, fill=10, remaining=10) == 3
+    assert fixed.depth(0, fill=10, remaining=3) == 2
+    # priced: verify at span k+1 is far cheaper than k+1 decode steps
+    # (param bytes stream once), so a confident EMA chooses k > 0
+    assert pol.depth(0, fill=10, remaining=10) > 0
+    # a hopeless EMA degrades to plain decode
+    pol.alpha[1] = 0.0
+    assert pol.depth(1, fill=10, remaining=10) == 0
+    # EMA update moves toward the observed acceptance
+    a0 = pol.alpha[0]
+    pol.update(0, proposed=4, accepted=0)
+    assert pol.alpha[0] < a0
+    pol.update(0, proposed=4, accepted=4)
+    assert pol.alpha[0] > pol.alpha[1]
+
+
+def test_verify_seconds_pricing():
+    """verify_seconds grows with span width, recurrent families pay the
+    commit factor, and admission's best-case per-token price never exceeds
+    the plain decode step."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    cm = CostModelAdmission(cfg, batch=2, max_len=48)
+    v1, v4 = cm.verify_seconds(1), cm.verify_seconds(4)
+    assert 0 < v1 < v4
+    # a fully-accepted span of 5 beats 5 decode steps by a wide margin
+    assert v4 / 5 < cm.step_seconds()
+    cm.spec_k = 4
+    assert cm.emit_seconds_per_token() <= cm.step_seconds()
+    # recurrent: commit replay doubles the verify price
+    rcfg = get_config("rwkv6-7b").reduced()
+    rcm = CostModelAdmission(rcfg, batch=2, max_len=48)
+    assert rcm.verify_seconds(2) == pytest.approx(
+        2.0 * rcm.param_bytes / HBM_BW)
