@@ -112,6 +112,30 @@ def run() -> list[str]:
     out.append(f"attention_verify span {sv}: {t_chain / t_verify:.2f}x vs "
                f"{sv} sequential decode steps")
 
+    # paged residency path (ISSUE 8): gathering a request's KV rows from a
+    # scattered page pool (cache_page_read over a 64-entry block table) vs
+    # the contiguous slice a slot table would read — the per-activation cost
+    # paged serving pays for admitting on pages instead of worst-case lanes
+    page = int(lib.ops.cache_page_read(
+        jnp.zeros((1024, 1), jnp.float32), jnp.zeros((1,), jnp.int32)
+    ).shape[0])
+    n_tab = 64
+    pool = jnp.asarray(rng.normal(size=(4 * n_tab * page, 256)), jnp.float32)
+    # worst-case locality: pages strided across the pool
+    tab = jnp.asarray(np.arange(n_tab, dtype=np.int32)[::-1] * 4 * page)
+    t_paged = time_fn(jax.jit(lambda t_: lib.ops.cache_page_read(pool, t_)),
+                      tab, n_iter=30)
+    t_contig = time_fn(
+        jax.jit(lambda p_: jax.lax.dynamic_slice_in_dim(p_, 0, n_tab * page)),
+        pool, n_iter=30)
+    rows_s = n_tab * page / (t_paged * 1e-6)
+    emit("prim_cache_page_read_tsl", t_paged,
+         f"page={page} x{n_tab} entries: {t_paged / t_contig:.2f}x vs "
+         f"contiguous slice ({rows_s:,.0f} rows/s)")
+    emit("prim_cache_rows_contiguous_direct", t_contig, "")
+    out.append(f"cache_page_read page {page}: {t_paged / t_contig:.2f}x vs "
+               "contiguous slice")
+
     a = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     b = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     t_tsl = time_fn(jax.jit(lambda x_: lib.ops.matmul(x_, b)), a)

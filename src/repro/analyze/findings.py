@@ -95,6 +95,12 @@ _CODE_LIST = (
          "dot/dot_general/einsum without preferred_element_type= accumulates "
          "in the input dtype — bf16 MXU accumulation loses ~8 bits per "
          "256-term sum."),
+    Code("TSL033", "warn", "page-size candidate misaligned to a target's "
+         "sublane tiling",
+         "cache_page_read/write gather whole pages as (page, row) slabs; a "
+         "page size that is not a positive multiple of a covered target's "
+         "SRU sublanes forces Mosaic relayouts on every gather and wastes "
+         "VREG rows on every scatter."),
     # -- implementation-body safety -----------------------------------------
     Code("TSL040", "error", "implementation body fails to render or parse",
          "Definition bodies are stage-1 Jinja templates that must render to "

@@ -23,7 +23,7 @@ from .coverage import check_coverage
 from .findings import AnalysisReport, Finding
 from .render import render_bodies
 from .safety import check_safety
-from .tiling import lint_kernel_file, lint_rendered_bodies
+from .tiling import check_page_geometry, lint_kernel_file, lint_rendered_bodies
 
 _DEF_LOC = re.compile(r"def\[(\d+)\]")
 
@@ -88,6 +88,7 @@ def run_analysis(corpus, *, kernel_roots: tuple[Path, ...] | None = None,
     ok = [rb for rb in bodies if not rb.error]
     rep.extend(check_safety(ok))
     rep.extend(lint_rendered_bodies(ok))
+    rep.extend(check_page_geometry(corpus))
 
     if kernel_roots is None:
         kernel_roots = (default_kernel_root(),)

@@ -20,6 +20,11 @@ and stage-1-rendered UPD pallas bodies) and checks:
   accumulates in the input dtype; bf16 MXU accumulation loses ~8 bits per
   256-term sum. (``jnp.einsum`` gets the same check via its
   ``preferred_element_type`` keyword.)
+* **TSL033** — paged-memory primitives (``serve: {page_sizes: [...]}``)
+  gather whole pages as (page, row) slabs, so every declared page-size
+  candidate must be a positive multiple of the SRU ``sublanes`` of every
+  target the primitive covers — otherwise each gather relayouts and each
+  scatter wastes VREG rows on that target.
 """
 
 from __future__ import annotations
@@ -199,6 +204,38 @@ def _check_module(tree: ast.Module, rep: AnalysisReport, *, subject: str,
 
 
 # -- entry points -------------------------------------------------------------
+
+def check_page_geometry(corpus) -> AnalysisReport:
+    """TSL033: every ``serve:`` page-size candidate vs each covered target's
+    sublane tiling. A primitive "covers" the targets its definitions name;
+    candidates come from ``serve.page_sizes`` (falling back to a lone
+    ``serve.page_size``)."""
+    rep = AnalysisReport()
+    for name in sorted(corpus.primitives):
+        prim = corpus.primitives[name]
+        serve = (prim.extra or {}).get("serve") or {}
+        sizes = serve.get("page_sizes")
+        if sizes is None:
+            sizes = [serve["page_size"]] if "page_size" in serve else []
+        if not sizes:
+            continue
+        covered = sorted({d.target_extension for d in prim.definitions})
+        for tname in covered:
+            tgt = corpus.targets.get(tname)
+            if tgt is None:
+                continue
+            sub = tgt.sublanes
+            for ps in sizes:
+                ps = int(ps)
+                if ps <= 0 or ps % sub != 0:
+                    rep.add("TSL033",
+                            f"page-size candidate {ps} is not a positive "
+                            f"multiple of {tname}'s sublanes={sub} — every "
+                            "page gather relayouts on this target",
+                            subject=f"primitive:{name}",
+                            location=f"target:{tname}")
+    return rep
+
 
 def lint_kernel_file(path: Path, *, sublanes: int = 8, lanes: int = 128,
                      root: Path | None = None) -> AnalysisReport:

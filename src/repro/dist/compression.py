@@ -12,12 +12,27 @@ import jax
 import jax.numpy as jnp
 
 
-def _quantize_roundtrip(x):
-    """x -> dequantize(quantize_int8(x)), computed in f32."""
+def quantize_absmax_int8(x):
+    """Per-row (last-axis) absmax int8 quantization: returns ``(q, scale)``
+    with ``q`` int8 in [-127, 127] and ``scale`` f32 keeping the last axis
+    as size 1. The wire/page format shared by gradient compression and the
+    serve layer's int8 cache pages (``repro.serve.paging``). Error per
+    element is bounded by scale/2 = amax/254."""
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
     scale = jnp.where(amax > 0, amax / 127.0, 1.0)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_absmax_int8(q, scale, dtype=jnp.float32):
+    """Inverse of :func:`quantize_absmax_int8` (up to the bounded error)."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def _quantize_roundtrip(x):
+    """x -> dequantize(quantize_int8(x)), computed in f32."""
+    q, scale = quantize_absmax_int8(x)
     return q.astype(jnp.float32) * scale
 
 

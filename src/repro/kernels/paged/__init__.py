@@ -1,0 +1,1 @@
+from .ref import page_read, page_write  # noqa: F401

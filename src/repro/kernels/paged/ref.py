@@ -1,0 +1,72 @@
+"""Paged cache gather/scatter: the reference bodies behind the
+``cache_page_read`` / ``cache_page_write`` UPD primitives.
+
+The pool is a FLAT token-row store ``(capacity_rows, *row_shape)``: one row
+per cache token, trailing dims free (a KV row, an (L, KH, hd) stack, an int8
+row + its scale row — the primitives are layout-agnostic). A page is
+``page_size`` CONSECUTIVE rows, and the page table passed to the primitives
+holds each page's STARTING ROW offset, so the same pool array serves any
+page-size candidate — the vector-length-agnostic discipline (ARM SVE)
+applied to cache geometry: page size is a property of the *definition*, not
+of the call site.
+
+Two schedules, mirroring the flash-attention block_k candidates:
+
+* ``page_read``/``page_write`` with small pages — one flat index gather /
+  scatter (``jnp.take`` / ``.at[].set``): many small slices, fine-grained
+  residency, more index traffic.
+* the ``*_blocked`` variants — one ``dynamic_slice`` per page: contiguous
+  page-sized block copies, the Mosaic/Triton-friendly schedule for large
+  pages (a 256-row page of 128-wide rows is a whole (sublane, lane)-aligned
+  tile stream).
+
+Bench selection (``python -m repro.core bench``) times the candidates per
+hardware key; the winning definition's page size is what the serving layer
+builds its pools with (``repro.serve.paging.selected_page_size`` probes it).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def page_read(pool, table, *, page: int):
+    """Gather ``page`` consecutive rows per table entry.
+
+    pool: (cap_rows, *row); table: (N,) int32 page start-row offsets.
+    Returns (N * page, *row), pages concatenated in table order."""
+    rows = (table[:, None] + jnp.arange(page, dtype=table.dtype)).reshape(-1)
+    return jnp.take(pool, rows, axis=0)
+
+
+def page_read_blocked(pool, table, *, page: int):
+    """Same semantics as :func:`page_read`, one contiguous dynamic_slice per
+    page — the large-page schedule."""
+
+    def one(start):
+        return jax.lax.dynamic_slice_in_dim(pool, start, page, axis=0)
+
+    out = jax.vmap(one)(table)                      # (N, page, *row)
+    return out.reshape((-1,) + pool.shape[1:])
+
+
+def page_write(pool, rows, table, *, page: int):
+    """Scatter ``page`` consecutive rows per table entry into the pool.
+
+    rows: (N * page, *row) content in table order; returns the updated pool."""
+    idx = (table[:, None] + jnp.arange(page, dtype=table.dtype)).reshape(-1)
+    return pool.at[idx].set(rows.astype(pool.dtype))
+
+
+def page_write_blocked(pool, rows, table, *, page: int):
+    """Same semantics as :func:`page_write`, one contiguous
+    dynamic_update_slice per page — the large-page schedule."""
+    blocks = rows.astype(pool.dtype).reshape((-1, page) + pool.shape[1:])
+
+    def one(p, sb):
+        start, blk = sb
+        return jax.lax.dynamic_update_slice_in_dim(p, blk, start, axis=0), 0
+
+    pool, _ = jax.lax.scan(one, pool, (table, blocks))
+    return pool

@@ -142,6 +142,15 @@ def state_batch_axes(state):
     return {k: 1 for k in state}
 
 
+def state_page_axes(state):
+    """Token-axis per leaf for PAGED serving: decoder self-attention caches
+    grow one row per emitted token (axis 3) and page; the cross K/V leaves
+    are computed ONCE from the encoder at prefill and never grow — they are
+    per-request TAIL state (``None``), sized by enc_len, snapshotted whole
+    (and shared with the prefix store when prompts coincide)."""
+    return {k: 3 if k in ("k", "v") else None for k in state}
+
+
 def encdec_prefill(params, tokens, cfg, *, audio_embeds, max_len: int):
     enc = encode(params, audio_embeds, cfg, remat=False)
 

@@ -139,6 +139,14 @@ def state_batch_axes(state):
     return {k: 1 for k in state}
 
 
+def state_page_axes(state):
+    """Token-axis position per state leaf for PAGED serving (None = not
+    paged): every KV leaf grows along axis 3, one row per cache token, so
+    both leaves page. KV rows depend only on their absolute position (rotary
+    at write time), which is what makes prefix pages exactly shareable."""
+    return {k: 3 for k in state}
+
+
 def lm_prefill(params, tokens, cfg, *, max_len: int, vision_embeds=None):
     """Full-sequence prefill; returns (last_logits, decode state)."""
     logits, _, kvs = lm_forward(params, tokens, cfg, vision_embeds=vision_embeds,

@@ -35,6 +35,13 @@ build_model(cfg) returns a Model with a uniform surface:
          rejected-slot rollback never perturbs neighbor slots.)
     init_decode_state(batch, max_len) -> zeroed state pytree
     state_batch_axes(state) -> pytree of slot-axis ints (same treedef)
+    state_page_axes(state) -> dict of token-axis ints or None (same keys)
+        (paged serving contract: each family declares which state leaves
+         grow one row per cache token — those page through the
+         cache_page_read/write primitives — and which are fixed-size
+         per-request TAIL state (None) that the paged store snapshots
+         whole: lm/vlm KV -> all paged; zamba -> attn KV paged, SSM/conv
+         tails; rwkv -> all tails; encdec -> self-KV paged, cross-KV tails)
     insert_slot(state, donor, slot) / reset_slot(state, slot)
         (serve-layer state surgery: graft a freshly prefilled request into
          one slot of a live batched decode state / clear a finished slot —
@@ -78,6 +85,8 @@ class Model:
     # speculative decoding (see module docstring):
     verify_step: Callable = None     # (params, state, tokens, pos) -> (logits, state)
     verify_commit: Callable = None   # (params, state, tokens, pos, n_commit) -> state
+    # paged serving (see module docstring): (state) -> {leaf: tok-axis|None}
+    state_page_axes: Callable = None
 
     def forward_logits(self, params, batch, *, remat: bool = False):
         logits, _, _ = self._forward(params, batch, remat)
@@ -169,6 +178,7 @@ def build_model(cfg: ArchConfig) -> Model:
             init_decode_state=lambda b, s, **kw: lm.init_decode_state(
                 cfg, b, s, jnp.dtype(cfg.dtype)),
             state_batch_axes=lm.state_batch_axes,
+            state_page_axes=lm.state_page_axes,
             verify_step=lambda p, st, t, pos: lm.lm_verify_step(
                 p, st, t, pos, cfg),
         )
@@ -190,6 +200,7 @@ def build_model(cfg: ArchConfig) -> Model:
             init_decode_state=lambda b, s, **kw: zamba.init_zamba_state(
                 cfg, b, s, jnp.dtype(cfg.dtype)),
             state_batch_axes=zamba.state_batch_axes,
+            state_page_axes=zamba.state_page_axes,
             verify_step=lambda p, st, t, pos: zamba.zamba_verify_step(
                 p, st, t, pos, cfg),
             verify_commit=lambda p, st, t, pos, n: zamba.zamba_prefill_chunk(
@@ -212,6 +223,7 @@ def build_model(cfg: ArchConfig) -> Model:
             init_decode_state=lambda b, s, **kw: rwkv_lm.init_rwkv_state(
                 cfg, b, jnp.dtype(cfg.dtype)),
             state_batch_axes=rwkv_lm.state_batch_axes,
+            state_page_axes=rwkv_lm.state_page_axes,
             verify_step=lambda p, st, t, pos: rwkv_lm.rwkv_verify_step(
                 p, st, t, cfg),
             verify_commit=lambda p, st, t, pos, n: rwkv_lm.rwkv_prefill_chunk(
@@ -242,6 +254,7 @@ def build_model(cfg: ArchConfig) -> Model:
                     cfg, b, s, enc_len=s if enc_len is None else enc_len,
                     dtype=jnp.dtype(cfg.dtype)),
             state_batch_axes=encdec.state_batch_axes,
+            state_page_axes=encdec.state_page_axes,
             verify_step=lambda p, st, t, pos: encdec.encdec_verify_step(
                 p, st, t, pos, cfg),
         )

@@ -109,6 +109,15 @@ def state_batch_axes(state):
     return {k: 1 for k in state}
 
 
+def state_page_axes(state):
+    """Token-axis per leaf for PAGED serving: rwkv state is pure recurrence
+    — no leaf grows with the sequence, so nothing pages (all ``None``). The
+    paged store still buys rwkv residency accounting (tail bytes per
+    request) and prefix sharing (a tail snapshot at a chunk boundary is the
+    whole prefix state)."""
+    return {k: None for k in state}
+
+
 def rwkv_prefill_chunk(params, state, tokens, cfg, *, n_real=None):
     """Continuation prefill of one chunk: consume ``tokens`` (B,C) into the
     carried recurrent state (zeros == fresh start). Returns (logits (B,C,V),

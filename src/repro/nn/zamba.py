@@ -206,6 +206,15 @@ def state_batch_axes(state):
     return {k: 2 if k in ("h", "conv") else 1 for k in state}
 
 
+def state_page_axes(state):
+    """Token-axis per leaf for PAGED serving: only the shared-attention KV
+    caches (G, B, KH, S, hd) grow per token (axis 3). The SSM/conv leaves
+    are fixed-size recurrent state — ``None`` marks them as the per-request
+    TAIL the paged store snapshots whole (and shares at prefix boundaries)
+    instead of paging."""
+    return {k: 3 if k in ("attn_k", "attn_v") else None for k in state}
+
+
 def zamba_decode_step(params, state, tokens_t, pos, cfg):
     x = tsl.embed_lookup(params["embed"], tokens_t)
 

@@ -57,9 +57,10 @@ import numpy as np
 
 from repro.nn.model import build_model
 
-from .scheduler import (BucketPolicy, CostModelAdmission, Refusal, Request,
-                        Scheduler)
-from .slots import assert_span_fits, validate_donor
+from .paging import PagedConfig, PagedKVStore, prefix_key, selected_page_size
+from .scheduler import (BucketPolicy, CostModelAdmission, PagedAdmission,
+                        Refusal, Request, Scheduler)
+from .slots import PagesExhausted, assert_span_fits, validate_donor
 from .spec import (SpeculationConfig, SpeculationPolicy, accept_span,
                    build_drafter, upd_verify_defaults)
 
@@ -92,6 +93,12 @@ class _PrefillTask:
     fill: int = 0               # REAL rows in the donor's cache (incl. prefix)
     first_logits: np.ndarray | None = None   # logits at the last real row
     prefill_s: float = 0.0
+    # paged mode (slot == -1: no lane is reserved; the request activates
+    # into a free lane at completion or parks resident in pages)
+    share_key: str | None = None    # prefix-store content address
+    share_rows: int = 0             # aligned share-boundary cache rows
+    publish: bool = False           # miss: this task publishes the prefix
+    boundary_tail: dict | None = None   # tail snapshot AT the boundary
 
 
 class ServeEngine:
@@ -100,7 +107,8 @@ class ServeEngine:
                  enc_len: int | None = None, admission: bool = True,
                  prefill_chunk: int | None = None,
                  buckets: tuple[int, ...] | None = None,
-                 speculation: SpeculationConfig | None = None):
+                 speculation: SpeculationConfig | None = None,
+                 paged: PagedConfig | None = None):
         if cfg.family == "audio" and enc_len is None:
             raise ValueError("audio family: pass enc_len (the fixed encoder "
                              "length every request's frames are sized to)")
@@ -131,11 +139,8 @@ class ServeEngine:
                     f"prefill chunk of {chunk}")
             fit = (largest,)
         self.policy = BucketPolicy(fit, chunk)
-        self.cost_model = CostModelAdmission(cfg, batch, max_len,
-                                             enc_len=enc_len,
-                                             policy=self.policy) \
-            if admission else None
-        # -- speculative decoding (draft/verify over the slot table) ---------
+        # -- speculative decoding depth (needed before the paged store: the
+        # slot table carries k_max scratch rows) -----------------------------
         # The verify span writes k_max+1 cache rows at each slot's fill; a
         # slot whose window is smaller than the step's global K would have
         # rows from NEIGHBOURS' depth written past its own budget, so the
@@ -144,15 +149,66 @@ class ServeEngine:
         # boundary would otherwise silently corrupt the last real rows.
         self.spec = speculation
         self._k_max = 0
+        if speculation is not None:
+            self._k_max = speculation.k_max if speculation.k_max is not None \
+                else upd_verify_defaults()["k_max"]
+        self._state_len = max_len + self._k_max
+        # -- paged slot memory (block-table residency under the lanes) -------
+        self.paged = paged
+        self._store: PagedKVStore | None = None
+        self._seed = seed
+        self._max_inflight = 0
+        self._parked: dict[str, dict] = {}      # rid -> resume info (FIFO)
+        self._resumed: dict[str, dict] = {}     # rid -> preemption stash
+        self._inflight_keys: dict[str, str] = {}  # share key -> publisher rid
+        self._act_stamp: dict[int, int] = {}    # slot -> activation seq
+        self._act_seq = 0
+        self._preempt_count = 0
+        if paged is not None:
+            if self.model.state_page_axes is None:
+                raise ValueError(f"family {cfg.family!r} does not declare "
+                                 "state_page_axes (paged serving needs the "
+                                 "per-leaf token-axis contract)")
+            donor_shapes = jax.eval_shape(
+                lambda: self.model.init_decode_state(
+                    1, self._state_len, enc_len=self.enc_len))
+            page_axes = self.model.state_page_axes(donor_shapes)
+            psize = paged.page_size or selected_page_size()
+            if paged.hbm_budget_bytes is not None:
+                self._store = PagedKVStore(
+                    donor_shapes, page_axes, page_size=psize,
+                    hbm_budget_bytes=paged.hbm_budget_bytes, int8=paged.int8)
+            else:
+                # default budget: pages for 2x the lane count at worst-case
+                # length — out of the box, paged strictly dominates the
+                # contiguous table and never preempts a lane-bound load
+                probe = PagedKVStore(donor_shapes, page_axes,
+                                     page_size=psize, n_pages=1,
+                                     int8=paged.int8)
+                self._store = PagedKVStore(
+                    donor_shapes, page_axes, page_size=psize,
+                    n_pages=2 * batch * max(probe.pages_for_rows(max_len), 1),
+                    int8=paged.int8)
+            self._max_inflight = paged.max_inflight_prefills or 2 * batch
+        if not admission:
+            self.cost_model = None
+        elif self._store is not None:
+            self.cost_model = PagedAdmission(cfg, batch, max_len,
+                                             budget=self._store,
+                                             enc_len=enc_len,
+                                             policy=self.policy)
+        else:
+            self.cost_model = CostModelAdmission(cfg, batch, max_len,
+                                                 enc_len=enc_len,
+                                                 policy=self.policy)
+        # -- speculative decoding (draft/verify over the slot table) ---------
         self._drafter = None
         self._spec_policy = None
         self._verify = None
         self._commit = None
         if speculation is not None:
-            self._k_max = speculation.k_max if speculation.k_max is not None \
-                else upd_verify_defaults()["k_max"]
             self._drafter = build_drafter(speculation, cfg, batch=batch,
-                                          state_len=max_len + self._k_max,
+                                          state_len=self._state_len,
                                           seed=seed + 2)
             pricing = self.cost_model or CostModelAdmission(
                 cfg, batch, max_len, enc_len=enc_len, policy=self.policy)
@@ -166,7 +222,6 @@ class ServeEngine:
             if self.model.verify_commit is not None:
                 self._commit = jax.jit(self.model.verify_commit,
                                        donate_argnums=(1,))
-        self._state_len = max_len + self._k_max
         # donate the incoming state: it is dead after every call, and without
         # donation each step/insert/reset copies the full multi-layer cache
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
@@ -248,6 +303,249 @@ class ServeEngine:
             return jnp.zeros((1, self.enc_len, cfg.d_model), cfg.dtype)
         return None
 
+    # -- paged serving helpers ------------------------------------------------
+
+    def _share_plan(self, req: Request) -> tuple[str | None, int]:
+        """(content key, boundary rows) for the shareable prefix of ``req``,
+        or (None, 0) when nothing aligned is shareable. The boundary is the
+        largest chunk-aligned token count <= the caller's shared_prefix_len
+        hint (default: the whole prompt minus its last token — the first
+        token's logits must come from a re-run chunk) whose ROW count (media
+        prefix + tokens) is page-aligned: only whole pages are shared."""
+        if self._store is None or not self.paged.prefix_sharing:
+            return None, 0
+        cap = req.prompt_len - 1 if req.shared_prefix_len is None \
+            else min(int(req.shared_prefix_len), req.prompt_len - 1)
+        chunk = self.policy.chunk
+        t = (cap // chunk) * chunk
+        if self._store.paged:
+            while t >= chunk and (self._prefix + t) % self._store.page:
+                t -= chunk
+        if t < chunk:
+            return None, 0
+        toks = np.asarray(req.tokens, np.int64)[:t]
+        key = prefix_key(arch=self.cfg.name, page_size=self._store.page,
+                         int8=self._store.int8, seed=self._seed,
+                         prefix_rows=self._prefix, tokens=toks,
+                         embeds=req.embeds)
+        return key, self._prefix + t
+
+    def _reserve_paged(self, sched: Scheduler, tasks: list, now, step: int):
+        """Paged reservation: admission is a PAGE decision, not a lane one —
+        admit up to max_inflight concurrent prefills, attach each to the
+        store (prompt pages now, shared prefix retained on a hit), and
+        fast-forward the chunk schedule past shared rows. A prompt whose
+        prefix is being prefilled by an in-flight publisher DEFERS until the
+        entry is published, which is what makes prefill-once exact: the
+        followers hit the store instead of racing the publisher."""
+        chunk = self.policy.chunk
+        while len(tasks) < self._max_inflight:
+            req = sched.next_admissible(now())
+            if req is None:
+                break
+            share_key, share_rows = self._share_plan(req)
+            if share_key is not None and share_key in self._inflight_keys:
+                sched.requeue_front(req)
+                break
+            bucket = req.bucket or self.policy.assign(req.prompt_len)
+            if not bucket:
+                bucket = BucketPolicy.round_up(req.prompt_len, chunk)
+            req.bucket = bucket
+            try:
+                shared = self._store.attach(
+                    req.rid, prompt_rows=self._prefix + req.prompt_len,
+                    share_key=share_key)
+            except PagesExhausted:
+                # admission saw enough pages, the attach lost the race
+                # (tail rounding / concurrent attaches): transient, retry
+                sched.requeue_front(req)
+                break
+            padded = np.zeros((1, bucket), np.int64)
+            padded[0, :req.prompt_len] = np.asarray(req.tokens, np.int64)
+            task = _PrefillTask(
+                req=req, slot=-1, padded=padded, n_chunks=bucket // chunk,
+                donor=self.model.init_decode_state(
+                    1, self._state_len, enc_len=self.enc_len),
+                share_key=share_key, share_rows=share_rows)
+            if shared:
+                # prefix hit: seed the donor from the shared pages (+ the
+                # boundary tail snapshot) and skip the chunks they cover —
+                # the shared prompt rows are never prefilled again
+                task.donor = self._store.load_donor(req.rid, task.donor)
+                task.fill = shared
+                task.chunk_idx = (shared - self._prefix) // chunk
+            elif share_key is not None:
+                task.publish = True
+                self._inflight_keys[share_key] = req.rid
+            sched.reserve_unplaced(req, step)
+            tasks.append(task)
+
+    def _activate_parked(self, sched: Scheduler, state, pending_host,
+                         pos_host, temps_host, histories):
+        """Drain parked (resident, lane-less) requests into free lanes,
+        FIFO: gather the request's pages back into a fresh donor
+        (cache_page_read; int8 pages dequantize here), graft it, and resume
+        decoding at its committed fill."""
+        for slot in sched.free_slots():
+            if not self._parked:
+                break
+            rid = next(iter(self._parked))
+            info = self._parked.pop(rid)
+            donor = self.model.init_decode_state(1, self._state_len,
+                                                 enc_len=self.enc_len)
+            donor = self._store.load_donor(rid, donor)
+            validate_donor(state, donor, self.model.state_batch_axes(state))
+            state = self._insert(state, donor, slot)
+            sched.place_parked(rid, slot)
+            temps_host[slot] = info["temp"]
+            pending_host[slot] = info["pending"]
+            pos_host[slot] = info["fill"]
+            histories[slot] = info["history"]
+            self._act_seq += 1
+            self._act_stamp[slot] = self._act_seq
+            if self._spec_policy is not None:
+                self._spec_policy.reset(slot)
+            if self._drafter is not None:
+                self._drafter.on_graft(rid, slot, histories[slot])
+        return state
+
+    def _preempt_slot(self, slot: int, sched: Scheduler, state, histories):
+        """Page exhaustion: evict the latest-activated decoding request from
+        its lane, free its pages, and requeue a CONTINUATION at the queue
+        head — prompt = everything the model has consumed, resume_token =
+        the emitted-but-unconsumed pending token. Re-prefilling those rows
+        reproduces the evicted cache exactly (chunked prefill is
+        token-for-token identical to decode), so preemption is lossless."""
+        req, m = sched.preempt(slot)
+        rid = req.rid
+        hist = histories.pop(slot)
+        prev = self._resumed.get(rid)
+        self._resumed[rid] = {
+            # original identity survives any number of preemptions
+            "prompt_len": prev["prompt_len"] if prev else m.prompt_len,
+            "bucket": prev["bucket"] if prev else m.bucket,
+            "admitted_at_step": (prev["admitted_at_step"] if prev
+                                 else m.admitted_at_step),
+            "gen_len": m.gen_len,
+            "ttft_s": m.ttft_s,
+            "tokens_out": m.tokens_out,
+            "prefill_s": m.prefill_s,
+            "decode_s": m.decode_s,
+            "preemptions": m.preemptions + 1,
+            "spec_proposed": m.spec_proposed,
+            "spec_accepted": m.spec_accepted,
+            "verify_rounds": m.verify_rounds,
+        }
+        self._preempt_count += 1
+        sched.requeue_front(Request(
+            rid=rid, tokens=np.asarray(hist[:-1], np.int64),
+            gen_len=m.gen_len, sla_s=req.sla_s, embeds=req.embeds,
+            arrival_s=req.arrival_s, temperature=req.temperature,
+            shared_prefix_len=req.shared_prefix_len,
+            resume_token=int(hist[-1])))
+        self._store.free(rid)
+        self._act_stamp.pop(slot, None)
+        state = self._reset(state, slot)
+        if self._drafter is not None:
+            self._drafter.on_finish(slot)
+        return state
+
+    def _grow_or_preempt(self, active, k_vec, sched, state, pos_host,
+                         histories):
+        """Before phase 2: every decoding slot's pages must cover the rows
+        this step may commit (pos + depth + 1, capped at max_len — verify
+        scratch rows beyond max_len only ever hold rejected drafts and are
+        never committed). On exhaustion, preempt the LATEST-activated slot
+        (LIFO: the one that has sunk the least decode work since
+        activation) until the grow fits — possibly the growing slot
+        itself."""
+        active = list(active)
+        for slot in list(active):
+            if slot not in active:
+                continue
+            rid = sched.slots[slot].request.rid
+            need = min(int(pos_host[slot]) + int(k_vec[slot]) + 1,
+                       self.max_len)
+            while True:
+                try:
+                    self._store.grow(rid, need)
+                    break
+                except PagesExhausted:
+                    victims = [s for s in active if s != slot] or [slot]
+                    victim = max(victims,
+                                 key=lambda s: self._act_stamp.get(s, -1))
+                    state = self._preempt_slot(victim, sched, state,
+                                               histories)
+                    active.remove(victim)
+                    k_vec[victim] = 0
+                    if victim == slot:
+                        break
+        return active, state
+
+    def _complete_paged(self, task: _PrefillTask, sched: Scheduler, state,
+                        now, outputs, histories, pending_host, pos_host,
+                        temps_host):
+        """Prefill completion in paged mode: commit the donor's rows past
+        the shared boundary into pages (cache_page_write; int8 quantizes
+        here), publish the prefix on a miss, sample the first token (or
+        resume a preemption's pending token), then activate into a free
+        lane — or PARK: the request stays resident in pages only, counted
+        by resident_requests, and activates when a lane frees. Returns
+        (state, first-tokens emitted: 0 for a resumed continuation)."""
+        req, rid = task.req, task.req.rid
+        tail = self._store.snapshot_tail(task.donor) \
+            if self._store.tail_leaves else None
+        self._store.store_donor(rid, task.donor, fill=task.fill, tail=tail)
+        if task.publish:
+            self._store.publish_prefix(rid, task.share_key,
+                                       n_rows=task.share_rows,
+                                       tail=task.boundary_tail)
+            self._inflight_keys.pop(task.share_key, None)
+        m = sched.unplaced_metrics(rid)
+        stash = self._resumed.pop(rid, None)
+        if stash is not None:
+            for name, val in stash.items():
+                setattr(m, name, val)
+        m.prefill_s += task.prefill_s
+        temp = self._slot_temperature(req)
+        gen_inc = 0
+        if req.resume_token is not None:
+            first = int(req.resume_token)
+        else:
+            first = int(np.asarray(self._sample(
+                jnp.asarray(task.first_logits), self._next_key(),
+                jnp.asarray([temp], np.float32)))[0])
+            outputs[rid] = [first]
+            gen_inc = 1
+            sched.first_token_unplaced(rid, now())
+        history = [int(t) for t in np.asarray(req.tokens)] + [first]
+        if m.tokens_out >= m.gen_len:
+            # gen_len == 1: finished without ever taking a lane
+            sched.finish_unplaced(rid, now())
+            self._store.free(rid)
+            return state, gen_inc
+        free = sched.free_slots()
+        if free:
+            slot = free[0]
+            validate_donor(state, task.donor,
+                           self.model.state_batch_axes(state))
+            state = self._insert(state, task.donor, slot)
+            sched.place_parked(rid, slot)
+            temps_host[slot] = temp
+            pending_host[slot] = first
+            pos_host[slot] = task.fill
+            histories[slot] = history
+            self._act_seq += 1
+            self._act_stamp[slot] = self._act_seq
+            if self._spec_policy is not None:
+                self._spec_policy.reset(slot)
+            if self._drafter is not None:
+                self._drafter.on_graft(rid, slot, history)
+        else:
+            self._parked[rid] = {"pending": first, "fill": task.fill,
+                                 "temp": temp, "history": history}
+        return state, gen_inc
+
     def jit_cache_sizes(self) -> dict:
         """Compiled-entry counts of the engine's jitted device functions —
         the probe behind the "never runs a shape it hasn't compiled" claim
@@ -287,6 +585,9 @@ class ServeEngine:
             raise ValueError(f"gen_len must be >= 1 (requests {bad}); the "
                              "first token always comes from prefill")
         sched = Scheduler(self.batch, admission=self.cost_model)
+        # paged run-state (parking, preemption stashes, publisher locks)
+        self._parked, self._resumed, self._inflight_keys = {}, {}, {}
+        self._act_stamp, self._act_seq, self._preempt_count = {}, 0, 0
         t0 = time.perf_counter()
         now = lambda: time.perf_counter() - t0  # noqa: E731
         for r in requests:
@@ -342,28 +643,37 @@ class ServeEngine:
             sched.release(now())
 
             # -- reservation: every free slot starts a chunk schedule --------
-            while True:
-                free = sched.free_slots()
-                if not free:
-                    break
-                req = sched.next_admissible(now())
-                if req is None:
-                    break
-                bucket = req.bucket or self.policy.assign(req.prompt_len)
-                if not bucket:
-                    # admission off + prompt beyond the largest bucket: still
-                    # cover the whole prompt in whole chunks (the max_len
-                    # overrun guard below stays the only hard stop)
-                    bucket = BucketPolicy.round_up(req.prompt_len, chunk)
-                req.bucket = bucket
-                padded = np.zeros((1, bucket), np.int64)
-                padded[0, :req.prompt_len] = np.asarray(req.tokens, np.int64)
-                tasks.append(_PrefillTask(
-                    req=req, slot=free[0], padded=padded,
-                    n_chunks=bucket // chunk,
-                    donor=self.model.init_decode_state(
-                        1, self._state_len, enc_len=self.enc_len)))
-                sched.reserve(free[0], req, step)
+            # (paged mode: activation + admission are PAGE decisions — drain
+            # parked requests into freed lanes, then admit lane-less)
+            if self._store is not None:
+                state = self._activate_parked(sched, state, pending_host,
+                                              pos_host, temps_host,
+                                              histories)
+                self._reserve_paged(sched, tasks, now, step)
+            else:
+                while True:
+                    free = sched.free_slots()
+                    if not free:
+                        break
+                    req = sched.next_admissible(now())
+                    if req is None:
+                        break
+                    bucket = req.bucket or self.policy.assign(req.prompt_len)
+                    if not bucket:
+                        # admission off + prompt beyond the largest bucket:
+                        # still cover the whole prompt in whole chunks (the
+                        # max_len overrun guard stays the only hard stop)
+                        bucket = BucketPolicy.round_up(req.prompt_len, chunk)
+                    req.bucket = bucket
+                    padded = np.zeros((1, bucket), np.int64)
+                    padded[0, :req.prompt_len] = np.asarray(req.tokens,
+                                                            np.int64)
+                    tasks.append(_PrefillTask(
+                        req=req, slot=free[0], padded=padded,
+                        n_chunks=bucket // chunk,
+                        donor=self.model.init_decode_state(
+                            1, self._state_len, enc_len=self.enc_len)))
+                    sched.reserve(free[0], req, step)
 
             # -- unified step, phase 1: one chunk per in-flight prefill ------
             ran: list[_PrefillTask] = []
@@ -394,11 +704,20 @@ class ServeEngine:
                 if n_real:
                     task.fill += n_real
                     task.first_logits = np.asarray(last)    # syncs the chunk
+                if (task.publish and task.boundary_tail is None
+                        and self._store is not None
+                        and self._store.tail_leaves
+                        and task.fill >= task.share_rows):
+                    # recurrent-tail families: the prefix entry must restore
+                    # the state AT the boundary, so snapshot it the moment
+                    # the fill crosses (boundary is chunk-aligned — the
+                    # crossing is exact)
+                    task.boundary_tail = self._store.snapshot_tail(task.donor)
             chunk_tokens = len(ran) * chunk
             prefill_tokens_total += chunk_tokens
 
             active = sched.active_slots()
-            if sched.queue:
+            if sched.queue and self._store is None:
                 # released queue still has work: every free, unreserved slot
                 # this step is waste. With per-step admission this is 0 by
                 # construction — the counter is a tripwire so any future
@@ -408,6 +727,21 @@ class ServeEngine:
 
             # -- phase 2: one decode OR verify step over every occupied slot -
             emitted_this_step = 0
+            # per-slot speculation depth, priced per step: clipped to the
+            # slot's remaining generation budget, 0 when the cost channel
+            # says drafting doesn't pay (or speculation is off)
+            k_vec = np.zeros(self.batch, np.int64)
+            if active and self._spec_policy is not None:
+                for slot in active:
+                    s_ = sched.slots[slot]
+                    remaining = s_.request.gen_len - s_.metrics.tokens_out
+                    k_vec[slot] = self._spec_policy.depth(
+                        slot, int(pos_host[slot]), remaining)
+            if active and self._store is not None:
+                # page growth for the rows this step commits; exhaustion
+                # preempts LIFO back to the queue head
+                active, state = self._grow_or_preempt(
+                    active, k_vec, sched, state, pos_host, histories)
             if active:
                 if int(pos_host[active].max()) >= self.max_len:
                     # reachable only with admission=False (admission's
@@ -416,16 +750,6 @@ class ServeEngine:
                     raise RuntimeError(
                         f"active slot position {int(pos_host[active].max())} "
                         f"overran max_len={self.max_len}")
-                # per-slot speculation depth, priced per step: clipped to the
-                # slot's remaining generation budget, 0 when the cost channel
-                # says drafting doesn't pay (or speculation is off)
-                k_vec = np.zeros(self.batch, np.int64)
-                if self._spec_policy is not None:
-                    for slot in active:
-                        s_ = sched.slots[slot]
-                        remaining = s_.request.gen_len - s_.metrics.tokens_out
-                        k_vec[slot] = self._spec_policy.depth(
-                            slot, int(pos_host[slot]), remaining)
                 K = int(k_vec.max())
                 pos_vec = jnp.asarray(pos_host, jnp.int32)
                 temps = jnp.asarray(temps_host)
@@ -525,6 +849,13 @@ class ServeEngine:
             for task in list(tasks):
                 if task.chunk_idx < task.n_chunks:
                     continue
+                if self._store is not None:
+                    state, gen_inc = self._complete_paged(
+                        task, sched, state, now, outputs, histories,
+                        pending_host, pos_host, temps_host)
+                    generated += gen_inc
+                    tasks.remove(task)
+                    continue
                 # prefill complete: graft the donor into its reserved slot,
                 # sample the first token, occupy
                 slot = task.slot
@@ -559,8 +890,12 @@ class ServeEngine:
                         self._drafter.on_finish(slot)
             for slot in list(active):
                 if sched.slot_done(slot):
+                    rid_done = sched.slots[slot].request.rid
                     sched.finish(slot, now())
                     state = self._reset(state, slot)
+                    if self._store is not None:
+                        self._store.free(rid_done)
+                        self._act_stamp.pop(slot, None)
                     if self._drafter is not None:
                         self._drafter.on_finish(slot)
 
@@ -621,6 +956,31 @@ class ServeEngine:
             if self.spec is not None:
                 report["cost_model"]["verify_seconds_k_max"] = \
                     self.cost_model.verify_seconds(self._k_max)
+        if self._store is not None:
+            st = self._store
+            budget_bytes = st.n_pages * st.page_bytes
+            contig_slot = max(st.contiguous_bytes_per_slot(self.max_len), 1)
+            report["paged"] = {
+                "page_size": st.page,
+                "page_bytes": st.page_bytes,
+                "n_pages": st.n_pages,
+                "hbm_budget_bytes": budget_bytes,
+                # bytes priced from ACTUAL pages allocated, not worst case
+                "hbm_bytes_resident": st.hbm_bytes_resident(),
+                "hbm_bytes_resident_peak": st.pages_used_peak * st.page_bytes,
+                "pages_used_peak": st.pages_used_peak,
+                "resident_requests": st.resident_requests(),
+                "resident_requests_peak": st.resident_peak,
+                # what a contiguous max-len slot table could hold at the
+                # SAME HBM budget — the residency headline's denominator
+                "contiguous_resident_bound": budget_bytes // contig_slot,
+                "prefix_hits": st.prefix_store.hits,
+                "prefix_misses": st.prefix_store.misses,
+                "prefix_entries": len(st.prefix_store.entries),
+                "cow_copies": st.cow_copies,
+                "preemptions": self._preempt_count,
+                "int8": st.int8,
+            }
         if self.spec is not None:
             # accepted-token rate + mean accepted span, overall and by bucket
             by_b: dict[int, list[int]] = {}

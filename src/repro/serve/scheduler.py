@@ -156,6 +156,15 @@ class Request:
                                       # SamplingConfig (<=0 -> greedy); mixed
                                       # greedy/sampled slots coexist in one
                                       # batched step / verify span
+    shared_prefix_len: int | None = None  # paged serving: leading tokens
+                                      # shared across requests (a system
+                                      # prompt) — the prefix-store boundary
+                                      # hint; None lets the engine share the
+                                      # whole prompt minus its last token
+    resume_token: int | None = None   # paged serving: set on a PREEMPTED
+                                      # continuation — the already-emitted
+                                      # pending token the engine must resume
+                                      # with instead of sampling a first one
 
     @property
     def prompt_len(self) -> int:
@@ -186,6 +195,9 @@ class RequestMetrics:
     spec_proposed: int = 0          # draft tokens proposed for this request
     spec_accepted: int = 0          # draft tokens accepted by the target
     verify_rounds: int = 0          # verify steps this request took part in
+    preemptions: int = 0            # paged serving: times this request was
+                                    # preempted on page exhaustion and
+                                    # requeued as a continuation
 
 
 @dataclass
@@ -392,6 +404,60 @@ class CostModelAdmission:
         return True, "ok"
 
 
+class PagedAdmission(CostModelAdmission):
+    """Page-count admission for the paged slot store: admit on pages
+    available NOW, not on worst-case bucket bytes.
+
+    The contiguous admission implicitly prices every request at a full
+    max-bucket cache reservation (a lane IS that reservation). With paged
+    memory the honest price is the pages the request's PROMPT needs at
+    attach (decode growth is paid step by step, with preemption as the
+    backstop), against the pages allocatable right now — the free list plus
+    every evictable prefix-store page. ``budget`` is any object with
+    ``pages_for_rows(rows)`` and ``pages_free()`` (the
+    :class:`repro.serve.paging.PagedKVStore` interface; tests inject fakes).
+
+    A page shortage is TRANSIENT (decodes finish, pages free), so it defers
+    rather than refuses: the ``defer:`` reason prefix makes
+    ``Scheduler.next_admissible`` put the request back at the FRONT of the
+    queue instead of recording a permanent refusal. Lane-capacity and SLA
+    refusals from the base class stay permanent.
+
+    A preempted continuation (``resume_token`` set) skips the SLA and
+    gen-budget re-checks — the original admission already priced the full
+    request, and refusing a half-served request would lose emitted tokens —
+    but still pays the page check for its (longer) re-prefill prompt.
+    """
+
+    def __init__(self, cfg, batch: int, max_len: int, *, budget,
+                 enc_len: int | None = None,
+                 policy: BucketPolicy | None = None):
+        super().__init__(cfg, batch, max_len, enc_len=enc_len, policy=policy)
+        self.budget = budget
+
+    def admit(self, req: Request, now_s: float) -> tuple[bool, str]:
+        if req.resume_token is not None:
+            chunk = self.policy.chunk if self.policy else 1
+            bucket = (self.policy.assign(req.prompt_len)
+                      if self.policy else None) \
+                or BucketPolicy.round_up(req.prompt_len, chunk)
+            if self.prefix + bucket + 1 > self.max_len:
+                return False, (f"over_budget: continuation prompt "
+                               f"{req.prompt_len} cannot re-prefill within "
+                               f"max_len {self.max_len}")
+            req.bucket = bucket
+        else:
+            ok, reason = super().admit(req, now_s)
+            if not ok:
+                return ok, reason
+        need = self.budget.pages_for_rows(self.prefix + req.prompt_len)
+        free = self.budget.pages_free()
+        if need > free:
+            return False, (f"defer: needs {need} pages for its prompt, "
+                           f"{free} allocatable now")
+        return True, "ok"
+
+
 @dataclass
 class _Slot:
     request: Request | None = None     # occupied: decoding
@@ -420,6 +486,12 @@ class Scheduler:
       attribute_step_time(...)         — split a shared step's wall time
                                          between prefill and decode tokens
       finish(slot, now) -> metrics     — request complete, slot freed
+
+    Paged mode adds a lane-less track: reserve_unplaced / place_parked /
+    first_token_unplaced / finish_unplaced (admission and parking are
+    page-count decisions, not lane decisions) and preempt / requeue_front
+    (page exhaustion sends a decoding request back to the queue head as a
+    resumable continuation).
     """
 
     def __init__(self, n_slots: int, admission: CostModelAdmission | None = None):
@@ -431,6 +503,9 @@ class Scheduler:
         self.finished: list[RequestMetrics] = []
         self.refused: list[Refusal] = []
         self.admission_log: list[dict] = []   # {step, slot, rid} per admission
+        # paged serving: requests admitted WITHOUT a lane (prefilling into a
+        # donor, or parked resident in pages awaiting a free lane)
+        self.unplaced: dict[str, tuple[Request, RequestMetrics]] = {}
 
     # -- request stream -------------------------------------------------------
 
@@ -469,8 +544,19 @@ class Scheduler:
             ok, reason = self.admission.admit(req, now_s)
             if ok:
                 return req
+            if reason.startswith("defer"):
+                # transient shortage (paged admission: pages free up as
+                # decodes finish): keep FIFO order, try again next step
+                self.queue.appendleft(req)
+                return None
             self.refused.append(Refusal(req.rid, reason))
         return None
+
+    def requeue_front(self, req: Request) -> None:
+        """Put a request at the HEAD of the queue: a preempted continuation
+        (it was already being served — it must not wait behind arrivals) or
+        an attach that lost a page race."""
+        self.queue.appendleft(req)
 
     # -- slot lifecycle -------------------------------------------------------
 
@@ -508,6 +594,72 @@ class Scheduler:
         s.request = req
         s.reserved = None
         s.served += 1
+
+    # -- paged serving: lane-less admission, parking, preemption --------------
+
+    def reserve_unplaced(self, req: Request, step: int) -> RequestMetrics:
+        """Admit a request WITHOUT reserving a lane (paged mode: the prefill
+        runs in a donor, and a completed request may stay parked in pages).
+        Logged with slot = -1; ``place_parked`` moves it into a lane later,
+        carrying these metrics with it."""
+        if req.rid in self.unplaced:
+            raise ValueError(f"request {req.rid!r} already unplaced")
+        self.admission_log.append({"step": step, "slot": -1, "rid": req.rid})
+        m = RequestMetrics(
+            rid=req.rid, slot=-1, prompt_len=req.prompt_len,
+            gen_len=req.gen_len, bucket=req.bucket or req.prompt_len,
+            sla_s=req.sla_s, admitted_at_step=step)
+        self.unplaced[req.rid] = (req, m)
+        return m
+
+    def unplaced_metrics(self, rid: str) -> RequestMetrics:
+        return self.unplaced[rid][1]
+
+    def place_parked(self, rid: str, slot: int) -> Request:
+        """Activate an unplaced (parked) request into a free lane, carrying
+        its metrics (TTFT was stamped at prefill completion, while parked)."""
+        s = self.slots[slot]
+        if not s.free:
+            raise ValueError(f"slot {slot} is not free")
+        req, m = self.unplaced.pop(rid)
+        m.slot = slot
+        s.request, s.metrics = req, m
+        s.served += 1
+        return req
+
+    def first_token_unplaced(self, rid: str, now_s: float) -> None:
+        """TTFT stamp for a request finishing prefill without a lane: the
+        first token exists (sampled from the last prefill chunk) whether or
+        not a lane is free to decode the second one."""
+        req, m = self.unplaced[rid]
+        m.ttft_s = max(now_s - req.arrival_s, 1e-9)
+        m.tokens_out = 1
+
+    def finish_unplaced(self, rid: str, now_s: float) -> RequestMetrics:
+        """Complete a request that never got (or no longer needs) a lane —
+        the parked gen_len == 1 edge case."""
+        req, m = self.unplaced.pop(rid)
+        m.latency_s = max(now_s - req.arrival_s, 1e-9)
+        decode_s = m.decode_s if m.decode_s > 0 \
+            else max(m.latency_s - m.ttft_s, 1e-9)
+        m.decode_tokens_per_s = max(m.tokens_out - 1, 0) / max(decode_s, 1e-9)
+        if m.sla_s is not None:
+            m.sla_met = m.latency_s <= m.sla_s
+        self.finished.append(m)
+        return m
+
+    def preempt(self, slot: int) -> tuple[Request, RequestMetrics]:
+        """Evict a DECODING request from its lane on page exhaustion. The
+        request is NOT finished: the engine stashes the metrics, requeues a
+        continuation (prompt + emitted tokens, ``resume_token`` set) at the
+        queue head, and merges the accounting when the continuation
+        completes its re-prefill."""
+        s = self.slots[slot]
+        if s.request is None:
+            raise ValueError(f"slot {slot} is not decoding")
+        req, m = s.request, s.metrics
+        s.request, s.reserved, s.metrics = None, None, None
+        return req, m
 
     def first_token(self, slot: int, now_s: float) -> None:
         m = self.slots[slot].metrics
@@ -580,7 +732,8 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return (bool(self.queue) or bool(self.pending)
-                or bool(self.active_slots()) or bool(self.reserved_slots()))
+                or bool(self.active_slots()) or bool(self.reserved_slots())
+                or bool(self.unplaced))
 
     def sla_hit_rate(self) -> float | None:
         scored = [m for m in self.finished if m.sla_met is not None]

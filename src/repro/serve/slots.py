@@ -15,12 +15,93 @@ jit them once and admit into ANY slot without recompiling — the
 jit-stable-shape property per-step continuous batching depends on.
 
 This module provides the serving-side companions: reading a slot back out
-(``take_slot``) and host-side donor validation (``validate_donor``).
+(``take_slot``), host-side donor validation (``validate_donor``), and the
+PAGED-memory building blocks: :class:`PageAllocator` (a refcounted free list
+over fixed-size cache pages — the unit the paged store accounts HBM in) and
+:class:`SlotPages` (one request's page list + fill). The device pools and
+the gather/scatter through the ``cache_page_read/write`` UPD primitives live
+in ``serve/paging.py``; this layer is pure host bookkeeping, so hypothesis
+can drive it hard (no double-free, refcounts never negative, alloc/free
+round-trips).
 """
 
 from __future__ import annotations
 
+from dataclasses import dataclass, field
+
 import jax
+
+
+class PagesExhausted(RuntimeError):
+    """No free page: the caller must evict/preempt or defer admission."""
+
+
+class PageAllocator:
+    """Refcounted free-list allocator over ``n_pages`` fixed-size pages.
+
+    Pages are abstract ids (0..n_pages-1); the paged store maps id -> row
+    offset ``id * page_size`` in every leaf pool. ``alloc`` hands out a page
+    at refcount 1; ``retain`` adds a sharer (copy-on-write prefix sharing);
+    ``release`` drops one reference and returns the page to the free list
+    when the count hits zero. Double-free and retain-after-free raise
+    instead of corrupting the pool."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 1:
+            raise ValueError(f"need at least one page, got {n_pages}")
+        self.n_pages = int(n_pages)
+        self._free = list(range(self.n_pages - 1, -1, -1))
+        self._refs = [0] * self.n_pages
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.n_pages - len(self._free)
+
+    def refcount(self, page: int) -> int:
+        return self._refs[page]
+
+    def alloc(self) -> int:
+        if not self._free:
+            raise PagesExhausted(f"all {self.n_pages} pages in use")
+        page = self._free.pop()
+        self._refs[page] = 1
+        return page
+
+    def _check(self, page: int) -> None:
+        if not 0 <= page < self.n_pages:
+            raise ValueError(f"page {page} outside pool of {self.n_pages}")
+
+    def retain(self, page: int) -> None:
+        self._check(page)
+        if self._refs[page] <= 0:
+            raise ValueError(f"retain of free page {page}")
+        self._refs[page] += 1
+
+    def release(self, page: int) -> None:
+        self._check(page)
+        if self._refs[page] <= 0:
+            raise ValueError(f"double free of page {page}")
+        self._refs[page] -= 1
+        if self._refs[page] == 0:
+            self._free.append(page)
+
+
+@dataclass
+class SlotPages:
+    """One request's page list: ``pages[i]`` covers cache rows
+    [i*page_size, (i+1)*page_size). ``n_shared`` leading pages are prefix-
+    store pages held by reference (read-only until copy-on-write)."""
+
+    pages: list[int] = field(default_factory=list)
+    n_shared: int = 0
+    fill: int = 0                   # real cache rows committed so far
+
+    def covered_rows(self, page_size: int) -> int:
+        return len(self.pages) * page_size
 
 
 def take_slot(state, axes, slot: int):

@@ -110,6 +110,27 @@ testing:
     implementation: |
       pass
 ...
+---
+primitive_name: "bad_page"
+group: "fixture"
+brief: "page-size candidate misaligned to minitgt sublanes -> TSL033."
+parameters:
+  - {name: "pool", ctype: "register"}
+  - {name: "table", ctype: "register"}
+returns: {ctype: "register"}
+serve: {page_size: 10, page_sizes: [10, 64]}
+definitions:
+  - target_extension: "minitgt"
+    ctype: ["float32"]
+    lscpu_flags: ["xla"]
+    implementation: |
+      return pool
+testing:
+  - name: "t"
+    requires: []
+    implementation: |
+      pass
+...
 """
 
 
@@ -174,6 +195,18 @@ def test_misaligned_blockspec_and_grid_are_tsl030_tsl031(golden):
            if f["subject"] == "primitive:bad_tile"]
     assert t30 and "96" in t30[0]["message"]
     assert t31 and "n // 7" in t31[0]["message"]
+
+
+def test_misaligned_page_size_is_tsl033(golden):
+    # bad_page declares page_sizes [10, 64] against minitgt (sublanes=8):
+    # 10 must fire, 64 must not — the check is per-candidate, per-target
+    _, data, _ = golden
+    hits = [f for f in _active(data, "TSL033")
+            if f["subject"] == "primitive:bad_page"]
+    assert hits and all(f["severity"] == "warn" for f in hits)
+    assert any("candidate 10" in f["message"] for f in hits)
+    assert not any("candidate 64" in f["message"] for f in hits)
+    assert all(f["location"] == "target:minitgt" for f in hits)
 
 
 def test_priced_primitives_unreachable_on_new_target_is_tsl014(golden):
