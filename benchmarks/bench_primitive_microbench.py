@@ -136,6 +136,68 @@ def run() -> list[str]:
     out.append(f"cache_page_read page {page}: {t_paged / t_contig:.2f}x vs "
                "contiguous slice")
 
+    # fused paged decode (ISSUE 9): decode DIRECTLY against the page pool
+    # through the block table, vs what the lane path pays per step-after-
+    # activation — gather the pages into a contiguous lane (cache_page_read,
+    # the page size the bench selected above) THEN run contiguous decode.
+    # Same page size, same row count, same interleaved worst-case locality;
+    # the gather bytes are data movement the fused primitive never does.
+    # The fused primitive is taken from the BENCH-SELECTED library (the
+    # pages-per-step/block_k winner for this host), because the serving
+    # engine runs exactly that selection.
+    # Pools, tables, and lane buffers are passed as TRACED jit arguments on
+    # both sides (closing over them lets XLA constant-fold the page gathers
+    # — a regime the serving engine never runs in: its pools are live device
+    # state threaded through every step).
+    lib_b = load_library("cpu_xla", use_bench_selection=True)
+    kh, d = 2, 64
+    n_per = max(2048 // page, 1)            # pages per slot: ~2k-row caches
+    rows = n_per * page
+    k_pool = jnp.asarray(rng.normal(size=(kh, 2 * n_per + 1, page, d)),
+                         jnp.float32)
+    v_pool = jnp.asarray(rng.normal(size=(kh, 2 * n_per + 1, page, d)),
+                         jnp.float32)
+    tabs = jnp.asarray(np.stack([np.arange(n_per) * 2 + 1,
+                                 np.arange(n_per) * 2 + 2]).astype(np.int32))
+    kvl = jnp.asarray([rows, rows], jnp.int32)
+    t_fused = time_fn(
+        jax.jit(lambda a_, kp_, vp_, t_, l_: lib_b.ops.attention_decode_paged(
+            a_, kp_, vp_, t_, kv_len=l_)),
+        qd, k_pool, v_pool, tabs, kvl, n_iter=30)
+
+    # lane layout: one flat (n_pages*page, KH*D) pool per k/v, rows gathered
+    # per slot then reshaped into the contiguous (B, KH, S, D) cache view
+    flat_k = jnp.asarray(
+        rng.normal(size=((2 * n_per + 1) * page, kh * d)), jnp.float32)
+    flat_v = jnp.asarray(
+        rng.normal(size=((2 * n_per + 1) * page, kh * d)), jnp.float32)
+    row_tabs = tabs * page                  # cache_page_read takes row offsets
+
+    def _gather_then_decode(a_, fk_, fv_, t_):
+        kl = jnp.stack([lib.ops.cache_page_read(fk_, t_[i])
+                        for i in range(2)]).reshape(2, rows, kh, d)
+        vl = jnp.stack([lib.ops.cache_page_read(fv_, t_[i])
+                        for i in range(2)]).reshape(2, rows, kh, d)
+        return fa_ref.attention_decode(a_, jnp.swapaxes(kl, 1, 2),
+                                       jnp.swapaxes(vl, 1, 2))
+
+    t_gather = time_fn(jax.jit(_gather_then_decode),
+                       qd, flat_k, flat_v, row_tabs, n_iter=30)
+    kc = jnp.asarray(rng.normal(size=(2, kh, rows, d)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, kh, rows, d)), jnp.float32)
+    t_contig = time_fn(
+        jax.jit(lambda a_, kc_, vc_: fa_ref.attention_decode(a_, kc_, vc_)),
+        qd, kc, vc, n_iter=30)
+    gather_bytes = 2 * 2 * rows * kh * d * 4    # B x {k,v} x rows x KH x D
+    emit("prim_attention_decode_paged_tsl", t_fused,
+         f"page={page} x{n_per}/slot: {t_gather / t_fused:.2f}x vs "
+         f"gather+decode ({gather_bytes:,} gather B/step eliminated)")
+    emit("prim_attention_decode_gather_direct", t_gather, "")
+    emit("prim_attention_decode_contig_direct", t_contig, "")
+    out.append(f"attention_decode_paged: {t_gather / t_fused:.2f}x vs "
+               f"gather+decode, {t_contig / t_fused:.2f}x vs contiguous "
+               f"decode ({gather_bytes:,} gather bytes/step eliminated)")
+
     a = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     b = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.bfloat16)
     t_tsl = time_fn(jax.jit(lambda x_: lib.ops.matmul(x_, b)), a)

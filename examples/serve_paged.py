@@ -5,7 +5,12 @@ max-length reservations.
 The paged engine charges HBM for pages actually produced, shares the system
 prompt's pages copy-on-write through the content-addressed prefix store
 (prefilled ONCE, asserted via the chunk count), and parks completed prefills
-in pages until a lane frees — so residency is bounded by pages, not lanes:
+in pages until a lane frees — so residency is bounded by pages, not lanes.
+Steady-state decode is FUSED (ISSUE 9): every step reads the pools through
+the block table via ``attention_decode_paged``, so no page->lane gather ever
+runs (asserted: zero lane activations). A second, tighter-budget run drives
+the host-spill tier: cold parked pages evicted to host arrays and rehydrated
+on reactivation, token counts intact:
 
     PYTHONPATH=src python examples/serve_paged.py
 """
@@ -82,6 +87,42 @@ def main():
     assert chunks == want, (chunks, want)
     print(f"[example] prefill chunks {chunks} == {want} "
           f"(system prompt prefilled once)")
+
+    # ISSUE 9: steady-state KV-family decode is fused — the pools are read
+    # through the block table, and NO page->lane gather ever ran
+    assert pg["fused"], pg
+    assert pg["lane_activations"] == 0, pg
+    assert pg["tail_restores"] > 0, pg
+    assert pg["gather_bytes_eliminated"] > 0, pg
+    print(f"[example] fused decode: 0 lane activations, "
+          f"{pg['tail_restores']} tails-only restores, "
+          f"{pg['gather_bytes_eliminated'] / 1e3:.0f} kB of gather "
+          f"eliminated")
+
+    # -- host spill tier: a budget too small for the parked population ------
+    small_page = 8
+    jax.clear_caches()
+    probe = ServeEngine(cfg, batch=2, max_len=24, seed=0,
+                        paged=PagedConfig(page_size=small_page))
+    tight = 5 * probe._store.page_bytes
+    del probe
+    rng = np.random.default_rng(1)
+    spill_reqs = [
+        Request(rid=f"s{i}", tokens=rng.integers(0, cfg.vocab, 8)
+                .astype(np.int32), gen_len=4, arrival_s=i * 0.02)
+        for i in range(5)]
+    jax.clear_caches()
+    spill_rep = ServeEngine(
+        cfg, batch=2, max_len=24, seed=0,
+        paged=PagedConfig(page_size=small_page,
+                          hbm_budget_bytes=tight)).run(spill_reqs)
+    sp = spill_rep["paged"]
+    assert all(len(spill_rep["outputs"][r.rid]) == 4 for r in spill_reqs)
+    assert sp["spills"] >= 1 and sp["rehydrates"] >= 1, sp
+    assert sp["host_spill_bytes"] == 0, sp       # everything came back
+    print(f"[example] spill tier: {sp['spills']} spills / "
+          f"{sp['rehydrates']} rehydrates under a {tight / 1e3:.0f} kB "
+          f"budget, all tokens emitted")
 
 
 if __name__ == "__main__":

@@ -205,33 +205,75 @@ def _check_module(tree: ast.Module, rep: AnalysisReport, *, subject: str,
 
 # -- entry points -------------------------------------------------------------
 
+def _serve_candidates(prim, plural: str, singular: str) -> list[int]:
+    serve = (prim.extra or {}).get("serve") or {}
+    vals = serve.get(plural)
+    if vals is None:
+        vals = [serve[singular]] if singular in serve else []
+    return [int(v) for v in vals]
+
+
 def check_page_geometry(corpus) -> AnalysisReport:
     """TSL033: every ``serve:`` page-size candidate vs each covered target's
     sublane tiling. A primitive "covers" the targets its definitions name;
     candidates come from ``serve.page_sizes`` (falling back to a lone
-    ``serve.page_size``)."""
+    ``serve.page_size``).
+
+    Fused-kernel geometry rides the same code: a primitive declaring
+    ``serve.block_ks`` (the block-table attention key-block candidates, e.g.
+    ``attention_decode_paged``) walks pool pages as its key grid, so every
+    block_k candidate must be compatible — equal or integer-divisible,
+    either way round — with every page-size candidate declared by a pager
+    primitive (``cache_page_read``) on the same target; otherwise a bench
+    winner pairing could leave the kernel with a key block that straddles a
+    page boundary and silently degrades to one block per page."""
     rep = AnalysisReport()
+    pagers = []      # (name, [page sizes], {covered targets})
     for name in sorted(corpus.primitives):
         prim = corpus.primitives[name]
-        serve = (prim.extra or {}).get("serve") or {}
-        sizes = serve.get("page_sizes")
-        if sizes is None:
-            sizes = [serve["page_size"]] if "page_size" in serve else []
+        sizes = _serve_candidates(prim, "page_sizes", "page_size")
         if not sizes:
             continue
         covered = sorted({d.target_extension for d in prim.definitions})
+        pagers.append((name, sizes, set(covered)))
         for tname in covered:
             tgt = corpus.targets.get(tname)
             if tgt is None:
                 continue
             sub = tgt.sublanes
             for ps in sizes:
-                ps = int(ps)
                 if ps <= 0 or ps % sub != 0:
                     rep.add("TSL033",
                             f"page-size candidate {ps} is not a positive "
                             f"multiple of {tname}'s sublanes={sub} — every "
                             "page gather relayouts on this target",
+                            subject=f"primitive:{name}",
+                            location=f"target:{tname}")
+    for name in sorted(corpus.primitives):
+        prim = corpus.primitives[name]
+        bks = _serve_candidates(prim, "block_ks", "block_k")
+        if not bks:
+            continue
+        covered = {d.target_extension for d in prim.definitions}
+        # page sizes this primitive can meet per target, with their sources
+        for tname in sorted(covered):
+            if tname not in corpus.targets:
+                continue
+            meets: dict[int, list[str]] = {}
+            for pname, sizes, ptargets in pagers:
+                if tname in ptargets:
+                    for ps in sizes:
+                        meets.setdefault(ps, []).append(pname)
+            for bk in bks:
+                for ps, sources in sorted(meets.items()):
+                    if bk > 0 and ps > 0 and (ps % bk == 0 or bk % ps == 0):
+                        continue
+                    rep.add("TSL033",
+                            f"block_k candidate {bk} is incompatible with "
+                            f"page-size candidate {ps} "
+                            f"(from {', '.join(sorted(set(sources)))}) — "
+                            "neither divides the other, so a fused key "
+                            "block would straddle a page boundary",
                             subject=f"primitive:{name}",
                             location=f"target:{tname}")
     return rep

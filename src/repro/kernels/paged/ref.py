@@ -30,6 +30,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+_NEG_INF = -1e30
+
 
 def page_read(pool, table, *, page: int):
     """Gather ``page`` consecutive rows per table entry.
@@ -57,6 +59,88 @@ def page_write(pool, rows, table, *, page: int):
     rows: (N * page, *row) content in table order; returns the updated pool."""
     idx = (table[:, None] + jnp.arange(page, dtype=table.dtype)).reshape(-1)
     return pool.at[idx].set(rows.astype(pool.dtype))
+
+
+def paged_attention_ref(q, k_pool, v_pool, tables, kv_len, *, k_scale=None,
+                        v_scale=None, scale=None, pages_per_step: int = 1):
+    """Gather-free paged attention: decode/verify straight off the page pool.
+
+    q: (B, H, SQ, D) — SQ = 1 for decode, the verify span width otherwise.
+    k_pool/v_pool: (KH, n_pages, page, D) — the WHOLE pool, every resident
+    request's pages interleaved. tables: (B, P) int32 PAGE IDS (indices into
+    the pool's page axis — not the start-row offsets ``page_read`` takes:
+    the block table never leaves page-id space here, which is the point).
+    kv_len: (B,) int32 rows written per sequence; rows of page p beyond it
+    are masked, and table entries past the covered range must still be
+    *valid* page ids (a scratch page) — they are fetched, then masked.
+
+    The span is ends-aligned at kv_len (row r of SQ sits at absolute
+    position kv_len - SQ + r), matching ``attention_verify``. int8 pools
+    pass per-row ``k_scale``/``v_scale`` pools of shape (KH, n_pages, page,
+    1); dequantization happens per touched page inside the scan — never at
+    a park/activate boundary. kv_len == 0 rows return exactly 0.
+
+    ``pages_per_step`` is the scan's key-block knob (the ref-side analogue
+    of the Pallas ``block_k`` candidates): each step fetches that many table
+    entries and runs one page-group-wide online-softmax update. The table
+    is padded to a multiple with its own first entry — padded positions sit
+    past every query row and mask out.
+    """
+    b, h, sq, d = q.shape
+    kh, _, page, _ = k_pool.shape
+    group = h // kh
+    n_p = tables.shape[1]
+    sc = scale if scale is not None else 1.0 / (d ** 0.5)
+    r = group * sq
+    # heads are KV-head-major (h = kh * group + g), as in the flash kernels
+    qf = q.astype(jnp.float32).reshape(b, kh, r, d)
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32).reshape(-1), (b,))
+    tables = jnp.asarray(tables, jnp.int32)
+    # absolute query position of span row (row % sq), per sequence
+    qi = kvl[:, None] - sq + (jnp.arange(r, dtype=jnp.int32) % sq)[None, :]
+
+    g = max(int(pages_per_step), 1)
+    n_steps = -(-n_p // g)
+    if n_steps * g != n_p:
+        # pad with each sequence's own first entry: padded logical positions
+        # are >= n_p * page > every qi, so they mask out below
+        pad = jnp.broadcast_to(tables[:, :1], (b, n_steps * g - n_p))
+        tables = jnp.concatenate([tables, pad], axis=1)
+    grouped = tables.reshape(b, n_steps, g)                  # scan xs, axis 1
+    width = g * page
+
+    def step(carry, xs):
+        m, l, acc = carry
+        p, pid = xs                                          # (), (B, G)
+        k = jnp.take(k_pool, pid, axis=1)                # (KH, B, G, page, D)
+        v = jnp.take(v_pool, pid, axis=1)
+        if k_scale is not None:
+            k = k.astype(jnp.float32) * jnp.take(k_scale, pid, axis=1)
+            v = v.astype(jnp.float32) * jnp.take(v_scale, pid, axis=1)
+        k = jnp.moveaxis(k, 1, 0).astype(jnp.float32)
+        v = jnp.moveaxis(v, 1, 0).astype(jnp.float32)
+        k = k.reshape(b, kh, width, d)                   # (B, KH, G*page, D)
+        v = v.reshape(b, kh, width, d)
+        s = jnp.einsum("bkrd,bkcd->bkrc", qf, k) * sc
+        kpos = p * width + jnp.arange(width, dtype=jnp.int32)  # logical pos
+        valid = kpos[None, None, :] <= qi[:, :, None]        # (B, R, width)
+        s = jnp.where(valid[:, None], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        pr = jnp.where(valid[:, None], jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + pr.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bkrc,bkcd->bkrd", pr, v)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kh, r), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kh, r), jnp.float32)
+    a0 = jnp.zeros((b, kh, r, d), jnp.float32)
+    (_, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(n_steps, dtype=jnp.int32), jnp.moveaxis(grouped, 1, 0)))
+    out = jnp.where(l[..., None] > 0, acc / jnp.maximum(l, 1e-30)[..., None],
+                    0.0)
+    return out.reshape(b, h, sq, d).astype(q.dtype)
 
 
 def page_write_blocked(pool, rows, table, *, page: int):

@@ -171,6 +171,58 @@ def _span_attend(p, x, k_cache, v_cache, pos, cfg, span_op):
     return tsl.matmul(o, p["wo"]), k_cache, v_cache
 
 
+def attention_span_paged(p, x, k_pool, v_pool, tables, pos, cfg, span_op, *,
+                         k_scale=None, v_scale=None):
+    """Fused paged decode/verify span: project a span of C tokens per slot,
+    write each row STRAIGHT into its block-table page, and attend directly
+    against the page pool — no page->lane gather anywhere.
+
+    x: (B, C, D) span activations (C == 1 is the decode step); pools
+    (KH, n_pages, page, hd) — one layer's slice of the serve-layer pool;
+    tables (B, P) int32 page ids; ``pos`` scalar or (B,) per-slot base write
+    positions. ``span_op`` is ``tsl.attention_decode_paged`` (C == 1) or
+    ``tsl.attention_verify_paged``; both mask ends-aligned at kv_len =
+    pos + C, so rows beyond a slot's committed fill are dead — rollback
+    stays free exactly as in the lane path. ``k_scale``/``v_scale``
+    (KH, n_pages, page, 1) switch the pools to the absmax-int8 wire format:
+    rows quantize per write and dequantize per touched page inside the
+    primitive. Inactive slots must point at a scratch page (valid id):
+    their row writes and reads land there harmlessly.
+
+    Returns (y (B,C,D), k_pool', v_pool', k_scale', v_scale')."""
+    from repro.dist.compression import quantize_absmax_int8
+
+    b, c, _ = x.shape
+    h, hd = cfg.n_heads, cfg.hd
+    page = k_pool.shape[-2]
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (b,))
+    positions = pos[:, None] + jnp.arange(c)[None, :]          # (B, C)
+    q, k, v = _project_qkv(p, x, cfg, positions)  # q (B,H,C,hd) k/v (B,KH,C,hd)
+    tab = jnp.asarray(tables, jnp.int32)
+    pid = jnp.take_along_axis(tab, positions // page, axis=1)  # (B, C)
+    off = positions % page
+    # pool.at[:, pid, off] broadcasts the (B, C) index pair under the KH
+    # slice -> (KH, B, C, hd) update slabs, heads-major like the pool
+    kr = jnp.swapaxes(k, 0, 1)
+    vr = jnp.swapaxes(v, 0, 1)
+    if k_scale is not None:
+        qk, sk = quantize_absmax_int8(kr)
+        qv, sv = quantize_absmax_int8(vr)
+        k_pool = k_pool.at[:, pid, off].set(qk)
+        v_pool = v_pool.at[:, pid, off].set(qv)
+        k_scale = k_scale.at[:, pid, off].set(sk)
+        v_scale = v_scale.at[:, pid, off].set(sv)
+    else:
+        k_pool = k_pool.at[:, pid, off].set(kr.astype(k_pool.dtype))
+        v_pool = v_pool.at[:, pid, off].set(vr.astype(v_pool.dtype))
+    o = span_op(q, k_pool, v_pool, tab, kv_len=pos + c,
+                k_scale=k_scale, v_scale=v_scale)
+    o = o.transpose(0, 2, 1, 3).reshape(b, c, h * hd)
+    return tsl.matmul(o, p["wo"]), k_pool, v_pool, k_scale, v_scale
+
+
 def attention_decode(p, x_t, k_cache, v_cache, pos, cfg, *, rope: bool = True):
     """One-token decode. x_t: (B,1,D); caches (B,KH,S_max,hd); pos: scalar
     write index, or a (B,) vector of PER-SLOT write indices (continuous

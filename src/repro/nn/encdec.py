@@ -23,8 +23,9 @@ def _scan(f, init, xs, **kw):
 
 
 from .attention import (attention_decode, attention_forward,
-                        attention_prefill_chunk, attention_verify,
-                        cross_attention_forward, init_attention, project_kv)
+                        attention_prefill_chunk, attention_span_paged,
+                        attention_verify, cross_attention_forward,
+                        init_attention, project_kv)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .mlp import init_mlp, mlp_forward
 
@@ -231,6 +232,66 @@ def encdec_verify_step(params, state, tokens, pos, cfg):
     x = apply_norm_params(cfg, params["final_norm"], x)
     logits = tsl.matmul(x, params["head"])
     return logits, {**state, "k": k, "v": v}
+
+
+def _encdec_paged_span(params, state, pools, tables, tokens, pos, cfg,
+                       span_op):
+    """Fused-paged decode/verify body: decoder self-attention writes and
+    reads its span straight against the page pools (attention_span_paged);
+    cross-attention still runs against the per-request cross K/V TAILS in
+    ``state`` (fixed-size, never paged). Returns (logits, pools)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+    int8 = "k__scale" in pools
+    xs = [params["dec_blocks"], pools["k"], pools["v"],
+          state["cross_k"], state["cross_v"]]
+    if int8:
+        xs += [pools["k__scale"], pools["v__scale"]]
+
+    def body(x_c, inp):
+        if int8:
+            bp, kp, vp, ck, cv, ks, vs = inp
+            ks, vs = ks[0], vs[0]
+        else:
+            bp, kp, vp, ck, cv = inp
+            ks = vs = None
+        h, kp0, vp0, ks0, vs0 = attention_span_paged(
+            bp["self_attn"], apply_norm_params(cfg, bp["self_norm"], x_c),
+            kp[0], vp[0], tables, pos, cfg, span_op,
+            k_scale=ks, v_scale=vs)
+        x_c = x_c + h
+        q_in = apply_norm_params(cfg, bp["cross_norm"], x_c)
+        x_c = x_c + cross_attention_forward(bp["cross_attn"], q_in, ck, cv, cfg)
+        x_c = x_c + mlp_forward(bp["mlp"], apply_norm_params(cfg, bp["mlp_norm"], x_c), cfg)
+        ys = (kp0[None], vp0[None])
+        if int8:
+            ys += (ks0[None], vs0[None])
+        return x_c, ys
+
+    x, ys = _scan(body, x, tuple(xs))
+    pools = {**pools, "k": ys[0], "v": ys[1]}
+    if int8:
+        pools["k__scale"], pools["v__scale"] = ys[2], ys[3]
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return tsl.matmul(x, params["head"]), pools
+
+
+def encdec_decode_step_paged(params, state, pools, tables, tokens_t, pos, cfg):
+    """Fused paged decode for the decoder: self-attention straight off the
+    page pools, cross-attention against the cross K/V tails. Returns
+    (logits (B,V), state, pools)."""
+    logits, pools = _encdec_paged_span(params, state, pools, tables,
+                                       tokens_t, pos, cfg,
+                                       tsl.attention_decode_paged)
+    return logits[:, 0], state, pools
+
+
+def encdec_verify_step_paged(params, state, pools, tables, tokens, pos, cfg):
+    """Fused paged verify span (rollback free — rejected rows sit beyond
+    the committed kv_len). Returns (logits (B,SV,V), state, pools)."""
+    logits, pools = _encdec_paged_span(params, state, pools, tables,
+                                       tokens, pos, cfg,
+                                       tsl.attention_verify_paged)
+    return logits, state, pools
 
 
 def encdec_decode_step(params, state, tokens_t, pos, cfg):

@@ -20,7 +20,7 @@ def _scan(f, init, xs, **kw):
 
 
 from .attention import (attention_decode, attention_forward, attention_prefill_chunk,
-                        attention_verify, init_attention)
+                        attention_span_paged, attention_verify, init_attention)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .mlp import init_mlp, mlp_forward
 from .moe import init_moe, moe_forward
@@ -224,6 +224,69 @@ def lm_verify_step(params, state, tokens, pos, cfg):
     x = apply_norm_params(cfg, params["final_norm"], x)
     logits = lm_head(params, x, cfg)
     return logits, {"k": k_new, "v": v_new}
+
+
+def _lm_paged_span(params, pools, tables, tokens, pos, cfg, span_op):
+    """Shared fused-paged decode/verify body: every layer's span attends
+    DIRECTLY against its slice of the block-table page pools (see
+    attention_span_paged) — the per-layer pool slices ride the layer scan
+    as xs/ys exactly like the lane caches do, so HLO stays O(1) in depth.
+    Returns (logits (B,C,V), new pools dict)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+    int8 = "k__scale" in pools
+    xs = [params["blocks"], pools["k"], pools["v"]]
+    if int8:
+        xs += [pools["k__scale"], pools["v__scale"]]
+
+    def body(x_c, inp):
+        if int8:
+            bp, kp, vp, ks, vs = inp
+            ks, vs = ks[0], vs[0]
+        else:
+            bp, kp, vp = inp
+            ks = vs = None
+        h, kp0, vp0, ks0, vs0 = attention_span_paged(
+            bp["attn"], apply_norm_params(cfg, bp["attn_norm"], x_c),
+            kp[0], vp[0], tables, pos, cfg, span_op,
+            k_scale=ks, v_scale=vs)
+        x_c = x_c + h
+        y = apply_norm_params(cfg, bp["mlp_norm"], x_c)
+        if cfg.n_experts:
+            y, _ = moe_forward(bp["moe"], y, cfg)
+        else:
+            y = mlp_forward(bp["mlp"], y, cfg)
+        ys = (kp0[None], vp0[None])
+        if int8:
+            ys += (ks0[None], vs0[None])
+        return x_c + y, ys
+
+    x, ys = _scan(body, x, tuple(xs))
+    pools = {**pools, "k": ys[0], "v": ys[1]}
+    if int8:
+        pools["k__scale"], pools["v__scale"] = ys[2], ys[3]
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return lm_head(params, x, cfg), pools
+
+
+def lm_decode_step_paged(params, state, pools, tables, tokens_t, pos, cfg):
+    """Fused paged decode: tokens_t (B,1) scored straight off the page
+    pools via attention_decode_paged (tables (B,P) int32 page ids, ``pos``
+    (B,) per-slot positions). ``state`` is the family's TAIL-only dict —
+    empty for this family (every leaf pages) — passed through untouched.
+    Returns (logits (B,V), state, pools)."""
+    logits, pools = _lm_paged_span(params, pools, tables, tokens_t, pos, cfg,
+                                   tsl.attention_decode_paged)
+    return logits[:, 0], state, pools
+
+
+def lm_verify_step_paged(params, state, pools, tables, tokens, pos, cfg):
+    """Fused paged verify span: tokens (B,SV) score in one ragged batched
+    attention_verify_paged pass; the span's K/V rows land in their pages,
+    rejected rows sit beyond the committed kv_len — rollback free, exactly
+    the lane-path contract. Returns (logits (B,SV,V), state, pools)."""
+    logits, pools = _lm_paged_span(params, pools, tables, tokens, pos, cfg,
+                                   tsl.attention_verify_paged)
+    return logits, state, pools
 
 
 def lm_decode_step(params, state, tokens_t, pos, cfg):

@@ -87,6 +87,17 @@ class Model:
     verify_commit: Callable = None   # (params, state, tokens, pos, n_commit) -> state
     # paged serving (see module docstring): (state) -> {leaf: tok-axis|None}
     state_page_axes: Callable = None
+    # FUSED paged serving — decode/verify DIRECTLY against the block-table
+    # page pools, no page->lane gather. ``state`` is the TAIL-only dict (the
+    # state_page_axes None leaves, batched); ``pools`` the store's device
+    # pool dict ({leaf} + optional {leaf}__scale int8 scales); ``tables``
+    # (B, P) int32 page ids (scratch-page padded); ``pos`` (B,) per-slot.
+    # None for families with no paged leaves (rwkv) — the engine falls back
+    # to lane activation.
+    decode_step_paged: Callable = None   # (p, st, pools, tables, t, pos) -> (logits, st, pools)
+    verify_step_paged: Callable = None   # (p, st, pools, tables, t, pos) -> (logits, st, pools)
+    # recurrent/hybrid only: replay the accepted prefix on the pools
+    verify_commit_paged: Callable = None  # (p, st, pools, tables, t, pos, n) -> (st, pools)
 
     def forward_logits(self, params, batch, *, remat: bool = False):
         logits, _, _ = self._forward(params, batch, remat)
@@ -181,6 +192,10 @@ def build_model(cfg: ArchConfig) -> Model:
             state_page_axes=lm.state_page_axes,
             verify_step=lambda p, st, t, pos: lm.lm_verify_step(
                 p, st, t, pos, cfg),
+            decode_step_paged=lambda p, st, pools, tab, t, pos:
+                lm.lm_decode_step_paged(p, st, pools, tab, t, pos, cfg),
+            verify_step_paged=lambda p, st, pools, tab, t, pos:
+                lm.lm_verify_step_paged(p, st, pools, tab, t, pos, cfg),
         )
     if fam == "hybrid":
         def fwd(params, batch, remat):
@@ -205,6 +220,13 @@ def build_model(cfg: ArchConfig) -> Model:
                 p, st, t, pos, cfg),
             verify_commit=lambda p, st, t, pos, n: zamba.zamba_prefill_chunk(
                 p, st, t, pos, cfg, n_real=n)[1],
+            decode_step_paged=lambda p, st, pools, tab, t, pos:
+                zamba.zamba_decode_step_paged(p, st, pools, tab, t, pos, cfg),
+            verify_step_paged=lambda p, st, pools, tab, t, pos:
+                zamba.zamba_verify_step_paged(p, st, pools, tab, t, pos, cfg),
+            verify_commit_paged=lambda p, st, pools, tab, t, pos, n:
+                zamba.zamba_verify_commit_paged(p, st, pools, tab, t, pos,
+                                                cfg, n),
         )
     if fam == "ssm":
         def fwd(params, batch, remat):
@@ -257,6 +279,12 @@ def build_model(cfg: ArchConfig) -> Model:
             state_page_axes=encdec.state_page_axes,
             verify_step=lambda p, st, t, pos: encdec.encdec_verify_step(
                 p, st, t, pos, cfg),
+            decode_step_paged=lambda p, st, pools, tab, t, pos:
+                encdec.encdec_decode_step_paged(p, st, pools, tab, t, pos,
+                                                cfg),
+            verify_step_paged=lambda p, st, pools, tab, t, pos:
+                encdec.encdec_verify_step_paged(p, st, pools, tab, t, pos,
+                                                cfg),
         )
     raise ValueError(f"unknown family {fam!r}")
 

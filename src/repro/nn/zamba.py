@@ -22,7 +22,7 @@ def _scan(f, init, xs, **kw):
 
 
 from .attention import (attention_decode, attention_forward, attention_prefill_chunk,
-                        attention_verify, init_attention)
+                        attention_span_paged, attention_verify, init_attention)
 from .common import apply_norm_params, dense_init, embed_init, init_norm, split_keys
 from .lm import lm_head
 from .mamba2 import dims as m2_dims, init_mamba2, mamba2_decode, mamba2_forward
@@ -213,6 +213,136 @@ def state_page_axes(state):
     TAIL the paged store snapshots whole (and shares at prefix boundaries)
     instead of paging."""
     return {k: 3 if k in ("attn_k", "attn_v") else None for k in state}
+
+
+def _zamba_paged_chunk(params, state, pools, tables, tokens, pos, cfg, *,
+                       span_op, n_real=None):
+    """Fused-paged analogue of :func:`zamba_prefill_chunk`: the mamba layers
+    carry the TAIL state (h, conv) exactly as before, while the shared
+    attention block writes and reads its span straight against the page
+    pools (attention_span_paged) — the per-group pool slices ride the group
+    scan as xs/ys. Returns (logits, new tail state, new pools)."""
+    x = tsl.embed_lookup(params["embed"], tokens)
+    int8 = "attn_k__scale" in pools
+
+    def mamba_body(x_c, inp):
+        bp, h0, conv_prev = inp
+        y, (h_f, conv_tail) = mamba2_forward(
+            bp["mamba"], apply_norm_params(cfg, bp["norm"], x_c), cfg,
+            h0=h0, conv_prev=conv_prev, n_real=n_real)
+        return x_c + y, (h_f, conv_tail)
+
+    def group_body(x_c, inp):
+        if int8:
+            gp, h_g, conv_g, kp, vp, ks, vs = inp
+            ks, vs = ks[0], vs[0]
+        else:
+            gp, h_g, conv_g, kp, vp = inp
+            ks = vs = None
+        x_c, (h_new, conv_new) = _scan(mamba_body, x_c, (gp, h_g, conv_g))
+        a, kp0, vp0, ks0, vs0 = attention_span_paged(
+            params["shared_attn"],
+            apply_norm_params(cfg, params["shared_attn_norm"], x_c),
+            kp[0], vp[0], tables, pos, cfg, span_op,
+            k_scale=ks, v_scale=vs)
+        ys = (h_new, conv_new, kp0[None], vp0[None])
+        if int8:
+            ys += (ks0[None], vs0[None])
+        return x_c + a, ys
+
+    xs = [params["groups"], state["h"], state["conv"],
+          pools["attn_k"], pools["attn_v"]]
+    if int8:
+        xs += [pools["attn_k__scale"], pools["attn_v__scale"]]
+    x, ys = _scan(group_body, x, tuple(xs))
+    new_state = {**state, "h": ys[0], "conv": ys[1]}
+    new_pools = {**pools, "attn_k": ys[2], "attn_v": ys[3]}
+    if int8:
+        new_pools["attn_k__scale"], new_pools["attn_v__scale"] = ys[4], ys[5]
+    if "rest" in params:
+        x, (h_r, conv_r) = _scan(
+            mamba_body, x, (params["rest"], state["h_rest"],
+                            state["conv_rest"]))
+        new_state["h_rest"] = h_r
+        new_state["conv_rest"] = conv_r
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return lm_head(params, x, cfg), new_state, new_pools
+
+
+def zamba_decode_step_paged(params, state, pools, tables, tokens_t, pos, cfg):
+    """Fused paged decode: the mamba recurrence updates its TAIL state
+    bit-identically to :func:`zamba_decode_step` (same mamba2_decode), and
+    the shared attention block decodes straight off the page pools.
+    Returns (logits (B,V), new tail state, new pools)."""
+    x = tsl.embed_lookup(params["embed"], tokens_t)
+    int8 = "attn_k__scale" in pools
+
+    def mamba_step(x_t, inp):
+        bp, h, conv = inp
+        y, h, conv = mamba2_decode(bp["mamba"],
+                                   apply_norm_params(cfg, bp["norm"], x_t),
+                                   cfg, h, conv)
+        return x_t + y, (h, conv)
+
+    def group_step(x_t, inp):
+        if int8:
+            gp, h_g, conv_g, kp, vp, ks, vs = inp
+            ks, vs = ks[0], vs[0]
+        else:
+            gp, h_g, conv_g, kp, vp = inp
+            ks = vs = None
+        x_t, (h_g, conv_g) = _scan(mamba_step, x_t, (gp, h_g, conv_g))
+        a, kp0, vp0, ks0, vs0 = attention_span_paged(
+            params["shared_attn"],
+            apply_norm_params(cfg, params["shared_attn_norm"], x_t),
+            kp[0], vp[0], tables, pos, cfg, tsl.attention_decode_paged,
+            k_scale=ks, v_scale=vs)
+        ys = (h_g, conv_g, kp0[None], vp0[None])
+        if int8:
+            ys += (ks0[None], vs0[None])
+        return x_t + a, ys
+
+    xs = [params["groups"], state["h"], state["conv"],
+          pools["attn_k"], pools["attn_v"]]
+    if int8:
+        xs += [pools["attn_k__scale"], pools["attn_v__scale"]]
+    x, ys = _scan(group_step, x, tuple(xs))
+    new_state = {**state, "h": ys[0], "conv": ys[1]}
+    new_pools = {**pools, "attn_k": ys[2], "attn_v": ys[3]}
+    if int8:
+        new_pools["attn_k__scale"], new_pools["attn_v__scale"] = ys[4], ys[5]
+    if "rest" in params:
+        x, (h_r, conv_r) = _scan(
+            mamba_step, x, (params["rest"], state["h_rest"],
+                            state["conv_rest"]))
+        new_state["h_rest"] = h_r
+        new_state["conv_rest"] = conv_r
+    x = apply_norm_params(cfg, params["final_norm"], x)
+    return lm_head(params, x, cfg)[:, 0], new_state, new_pools
+
+
+def zamba_verify_step_paged(params, state, pools, tables, tokens, pos, cfg):
+    """Fused paged verify span, PURE scoring for the tails: the incoming
+    tail state comes back UNCHANGED (the engine replays the accepted prefix
+    through :func:`zamba_verify_commit_paged`), while the span's K/V rows
+    land in the pools — the replay's writes are idempotent over them and
+    rejected rows sit beyond the committed kv_len. Returns
+    (logits (B,SV,V), state, pools)."""
+    logits, _, pools = _zamba_paged_chunk(
+        params, state, pools, tables, tokens, pos, cfg,
+        span_op=tsl.attention_verify_paged)
+    return logits, state, pools
+
+
+def zamba_verify_commit_paged(params, state, pools, tables, tokens, pos, cfg,
+                              n_commit):
+    """Commit replay on the pools: re-run the accepted prefix with per-slot
+    ``n_commit`` (B,) real rows — n_commit == 0 is an exact identity for
+    that slot's tails. Returns (new tail state, new pools)."""
+    _, state, pools = _zamba_paged_chunk(
+        params, state, pools, tables, tokens, pos, cfg,
+        span_op=tsl.attention_verify_paged, n_real=n_commit)
+    return state, pools
 
 
 def zamba_decode_step(params, state, tokens_t, pos, cfg):

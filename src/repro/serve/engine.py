@@ -177,7 +177,8 @@ class ServeEngine:
             if paged.hbm_budget_bytes is not None:
                 self._store = PagedKVStore(
                     donor_shapes, page_axes, page_size=psize,
-                    hbm_budget_bytes=paged.hbm_budget_bytes, int8=paged.int8)
+                    hbm_budget_bytes=paged.hbm_budget_bytes, int8=paged.int8,
+                    fused=paged.fused)
             else:
                 # default budget: pages for 2x the lane count at worst-case
                 # length — out of the box, paged strictly dominates the
@@ -188,8 +189,29 @@ class ServeEngine:
                 self._store = PagedKVStore(
                     donor_shapes, page_axes, page_size=psize,
                     n_pages=2 * batch * max(probe.pages_for_rows(max_len), 1),
-                    int8=paged.int8)
+                    int8=paged.int8, fused=paged.fused)
             self._max_inflight = paged.max_inflight_prefills or 2 * batch
+            self._page_axes = page_axes
+        # FUSED paged decode: KV-family slots decode/verify DIRECTLY against
+        # the block-table page pools (attention_decode_paged /
+        # attention_verify_paged) — no page->lane gather on the steady-state
+        # path. The store downgrades fused for families with no paged leaves
+        # (rwkv), and a family without the paged step contract falls back to
+        # lane activation the same way.
+        self._fused = bool(self._store is not None and self._store.fused
+                           and self.model.decode_step_paged is not None)
+        if self._store is not None and self._store.fused and not self._fused:
+            # paged leaves but no fused contract: rebuild flat (lane mode)
+            self._store = PagedKVStore(
+                donor_shapes, page_axes, page_size=self._store.page,
+                n_pages=self._store.n_pages, int8=paged.int8)
+        self._table_width = 0
+        if self._fused:
+            self._table_width = -(-self._state_len // self._store.page)
+        # fused-path counters for report["paged"]
+        self._lane_activations = 0      # full page->lane gathers (fallback)
+        self._tail_restores = 0         # fused activations (tails only)
+        self._gather_bytes_eliminated = 0
         if not admission:
             self.cost_model = None
         elif self._store is not None:
@@ -225,6 +247,21 @@ class ServeEngine:
         # donate the incoming state: it is dead after every call, and without
         # donation each step/insert/reset copies the full multi-layer cache
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        # fused paged steps: the tail state AND the pool dict are donated —
+        # the pools are updated in place on device and re-adopted by the
+        # store after every call (set_device_pools)
+        self._decode_paged = None
+        self._verify_paged = None
+        self._commit_paged = None
+        if self._fused:
+            self._decode_paged = jax.jit(self.model.decode_step_paged,
+                                         donate_argnums=(1, 2))
+            if speculation is not None:
+                self._verify_paged = jax.jit(self.model.verify_step_paged,
+                                             donate_argnums=(1, 2))
+                if self.model.verify_commit_paged is not None:
+                    self._commit_paged = jax.jit(
+                        self.model.verify_commit_paged, donate_argnums=(1, 2))
         self._insert = jax.jit(self.model.insert_slot, donate_argnums=(0,))
         self._reset = jax.jit(self.model.reset_slot, donate_argnums=(0,))
         self._chunk = jax.jit(self._chunk_fn, donate_argnums=(1,))
@@ -286,8 +323,37 @@ class ServeEngine:
         # _state_len = max_len + k_max: verify-span slab headroom (see
         # __init__) — admission and the overrun guards still cap real fill
         # at max_len, the scratch rows only ever hold rejected drafts
-        return self.model.init_decode_state(self.batch, self._state_len,
-                                            enc_len=self.enc_len)
+        state = self.model.init_decode_state(self.batch, self._state_len,
+                                             enc_len=self.enc_len)
+        if self._fused:
+            # fused mode keeps only the TAIL leaves in the slot table: the
+            # paged leaves live exclusively in the store's pools and every
+            # decode/verify reads them through the block table
+            state = {n: state[n] for n, ax in self._page_axes.items()
+                     if ax is None}
+        return state
+
+    def _donor_tails(self, donor: dict) -> dict:
+        return {n: donor[n] for n in self._store.tail_leaves}
+
+    def _tails_template(self) -> dict:
+        """Zeroed tails-only donor (size-1 slot axis) for fused activation —
+        load_donor restores the tail snapshot into it and, lacking the paged
+        leaves, skips the page gather entirely."""
+        return {n: jnp.zeros(shape, dt)
+                for n, (shape, dt) in self._store.tail_leaves.items()}
+
+    def _build_tables(self, sched, active) -> jnp.ndarray:
+        """(B, P) int32 block table for this step: active slots' page lists
+        (scratch-padded past coverage), all-scratch rows for idle slots —
+        every entry is a valid page id, the fused kernels' index maps fetch
+        unconditionally."""
+        tabs = np.full((self.batch, self._table_width),
+                       self._store.scratch_page, np.int32)
+        for slot in active:
+            rid = sched.slots[slot].request.rid
+            tabs[slot] = self._store.table_row(rid, self._table_width)
+        return jnp.asarray(tabs)
 
     def _first_chunk_embeds(self, req: Request):
         """Per-request media for the FIRST chunk: vlm vision prefix rows /
@@ -391,9 +457,21 @@ class ServeEngine:
                 break
             rid = next(iter(self._parked))
             info = self._parked.pop(rid)
-            donor = self.model.init_decode_state(1, self._state_len,
-                                                 enc_len=self.enc_len)
-            donor = self._store.load_donor(rid, donor)
+            self._store.pin(rid)        # hot again: rehydrate + no spilling
+            if self._fused:
+                # tails-only restore: the paged leaves stay in the pools and
+                # the next step reads them through the block table — the
+                # page->lane gather the lane path would run here is the
+                # bytes we count as eliminated
+                donor = self._store.load_donor(rid, self._tails_template())
+                self._tail_restores += 1
+                self._gather_bytes_eliminated += \
+                    self._store.requests[rid].fill * self._store.fp_row_bytes
+            else:
+                donor = self.model.init_decode_state(1, self._state_len,
+                                                     enc_len=self.enc_len)
+                donor = self._store.load_donor(rid, donor)
+                self._lane_activations += 1
             validate_donor(state, donor, self.model.state_batch_axes(state))
             state = self._insert(state, donor, slot)
             sched.place_parked(rid, slot)
@@ -527,9 +605,11 @@ class ServeEngine:
         free = sched.free_slots()
         if free:
             slot = free[0]
-            validate_donor(state, task.donor,
+            donor = self._donor_tails(task.donor) if self._fused \
+                else task.donor
+            validate_donor(state, donor,
                            self.model.state_batch_axes(state))
-            state = self._insert(state, task.donor, slot)
+            state = self._insert(state, donor, slot)
             sched.place_parked(rid, slot)
             temps_host[slot] = temp
             pending_host[slot] = first
@@ -544,6 +624,7 @@ class ServeEngine:
         else:
             self._parked[rid] = {"pending": first, "fill": task.fill,
                                  "temp": temp, "history": history}
+            self._store.unpin(rid)      # parked: cold, host-spillable
         return state, gen_inc
 
     def jit_cache_sizes(self) -> dict:
@@ -753,13 +834,25 @@ class ServeEngine:
                 K = int(k_vec.max())
                 pos_vec = jnp.asarray(pos_host, jnp.int32)
                 temps = jnp.asarray(temps_host)
+                tables = pools = None
+                if self._fused:
+                    # steady-state fused path: this step reads/writes the
+                    # pools THROUGH the block table — no page->lane gather
+                    tables = self._build_tables(sched, active)
+                    pools = self._store.device_pools()
                 if K == 0:
                     # degraded path: EXACTLY today's decode step — same jitted
                     # fn, same sampler call, same key draw — so k=0
                     # speculation is token-for-token identical to PR 5 decode
                     tokens = jnp.asarray(pending_host[:, None], jnp.int32)
-                    logits, state = self._decode(self.params, state, tokens,
-                                                 pos_vec)
+                    if self._fused:
+                        logits, state, pools = self._decode_paged(
+                            self.params, state, pools, tables, tokens,
+                            pos_vec)
+                        self._store.set_device_pools(pools)
+                    else:
+                        logits, state = self._decode(self.params, state,
+                                                     tokens, pos_vec)
                     toks = np.asarray(self._sample(logits, self._next_key(),
                                                    temps))
                     decode_steps += 1
@@ -784,8 +877,12 @@ class ServeEngine:
                     # included), so the guard covers every slot's position
                     assert_span_fits(pos_host, K + 1, self._state_len)
                     span = jnp.asarray(span_np, jnp.int32)
-                    logits, state = self._verify(self.params, state, span,
-                                                 pos_vec)
+                    if self._fused:
+                        logits, state, pools = self._verify_paged(
+                            self.params, state, pools, tables, span, pos_vec)
+                    else:
+                        logits, state = self._verify(self.params, state, span,
+                                                     pos_vec)
                     # sample the target token at EVERY span row (per-slot
                     # temperature); row j validates draft j+1, row m yields
                     # the corrected token for a slot accepting m drafts
@@ -795,7 +892,13 @@ class ServeEngine:
                     n_commit = np.zeros(self.batch, np.int64)
                     for slot in active:
                         n_commit[slot] = m_vec[slot] + 1
-                    if self._commit is not None:
+                    if self._fused:
+                        if self._commit_paged is not None:
+                            state, pools = self._commit_paged(
+                                self.params, state, pools, tables, span,
+                                pos_vec, jnp.asarray(n_commit, jnp.int32))
+                        self._store.set_device_pools(pools)
+                    elif self._commit is not None:
                         # recurrent/hybrid: replay the accepted prefix of the
                         # span through the chunked-prefill path (per-slot
                         # n_commit real rows; 0 == exact identity, so
@@ -980,6 +1083,23 @@ class ServeEngine:
                 "cow_copies": st.cow_copies,
                 "preemptions": self._preempt_count,
                 "int8": st.int8,
+                "fused": self._fused,
+                # host spill tier: cold unshared pages evicted to host RAM
+                "spills": st.spills,
+                "rehydrates": st.rehydrates,
+                "spilled_pages": st.spilled_pages(),
+                "host_spill_bytes": st.host_spill_bytes(),
+                # fused-decode accounting: lane_activations counts full
+                # page->lane gathers (fallback families only); fused
+                # activations restore just the recurrent tail and skip the
+                # KV gather entirely — gather_bytes_eliminated is the fp
+                # bytes those skipped gathers would have moved
+                "lane_activations": self._lane_activations,
+                "tail_restores": self._tail_restores,
+                "gather_bytes_eliminated": self._gather_bytes_eliminated,
+                "gather_bytes_eliminated_per_step":
+                    self._gather_bytes_eliminated
+                    / max(decode_steps + verify_steps, 1),
             }
         if self.spec is not None:
             # accepted-token rate + mean accepted span, overall and by bucket

@@ -28,6 +28,27 @@ token-for-token provable); this store is the RESIDENCY layer under it:
   ``repro.dist.compression`` (per-row scale alongside an int8 pool) —
   activation dequantizes on gather. Opt-in because it changes numerics.
 
+FUSED mode (``PagedConfig.fused``, the default when the family has paged
+leaves) removes the activation gather from the hot path entirely: pools keep
+the leaf's own layout with the token axis split in-place into
+``(n_pages, page)`` (e.g. a ``(L, 1, KH, S, hd)`` KV leaf becomes a
+``(L, 1, KH, n_pages, page, hd)`` pool), so each layer's slice is directly
+the ``(KH, n_pages, page, hd)`` operand of the ``attention_decode_paged`` /
+``attention_verify_paged`` UPD primitives. KV-family slots then decode and
+verify straight off the pool through per-step block tables (a dedicated
+SCRATCH page absorbs table entries beyond a slot's coverage); lane
+activation survives only for recurrent tails and as an explicit fallback,
+and int8 pages dequantize per touched page inside the kernel instead of at
+park/activate boundaries.
+
+HOST SPILL adds an LRU tier under the pool: when the allocator runs dry and
+no prefix entry is evictable, cold pages — unpinned (parked) requests'
+exclusive, unshared data pages — are copied to host arrays and their device
+pages released; they rehydrate into fresh pages when the request is touched
+(pinned/activated) again. ``pages_free`` counts spillable pages as
+reclaimable, so admission defers less under a cold-heavy pool, and the
+spill/rehydrate counters land in ``report["paged"]``.
+
 Page size is UPD data: the ``serve:`` block on ``cache_page_read`` declares
 the candidates, bench selection picks the winner per hardware key, and
 :func:`selected_page_size` probes the generated library for the choice (the
@@ -111,13 +132,20 @@ class PagedConfig:
     ``int8`` stores pages quantized (parked/shared requests reactivate
     through dequantization; active lanes always run full precision).
     ``max_inflight_prefills`` caps concurrent chunk schedules (None: 2x
-    lanes)."""
+    lanes).
+    ``fused`` decodes/verifies KV-family slots directly against the block
+    table via the ``attention_decode_paged``/``attention_verify_paged``
+    primitives — no page->lane gather on the steady-state decode path.
+    ``False`` forces the PR 8 activate-into-a-lane fallback (bit-identical
+    to contiguous decode); families with no paged leaves (rwkv) fall back
+    automatically either way."""
 
     hbm_budget_bytes: int | None = None
     page_size: int | None = None
     int8: bool = False
     prefix_sharing: bool = True
     max_inflight_prefills: int | None = None
+    fused: bool = True
 
 
 @dataclass
@@ -200,7 +228,8 @@ class PagedKVStore:
 
     def __init__(self, donor_shapes: dict, page_axes: dict, *,
                  page_size: int, hbm_budget_bytes: int | None = None,
-                 n_pages: int | None = None, int8: bool = False):
+                 n_pages: int | None = None, int8: bool = False,
+                 fused: bool = False):
         if not isinstance(donor_shapes, dict) or not isinstance(page_axes,
                                                                 dict):
             raise TypeError("paged serving requires dict-shaped states "
@@ -243,16 +272,25 @@ class PagedKVStore:
         # tail reservation: pages charged per request for its tail bytes
         self.tail_pages = -(-tail_bytes // self.page_bytes) if tail_bytes \
             else 0
+        self.fused = bool(fused) and bool(self.paged)
         cap = self.n_pages * self.page
         self.pools: dict[str, jnp.ndarray] = {}
         self.scale_pools: dict[str, jnp.ndarray] = {}
-        for name, (_, row_shape, dt) in self.paged.items():
-            if self.int8:
-                self.pools[name] = jnp.zeros((cap,) + row_shape, jnp.int8)
-                self.scale_pools[name] = jnp.ones(
-                    (cap,) + row_shape[:-1] + (1,), jnp.float32)
+        for name, (ax, row_shape, dt) in self.paged.items():
+            if self.fused:
+                # keep the leaf's own layout, token axis split in-place into
+                # (n_pages, page): directly the fused primitives' pool operand
+                shape = row_shape[:ax] + (self.n_pages, self.page) \
+                    + row_shape[ax:]
+                sshape = shape[:-1] + (1,)
             else:
-                self.pools[name] = jnp.zeros((cap,) + row_shape, dt)
+                shape = (cap,) + row_shape
+                sshape = (cap,) + row_shape[:-1] + (1,)
+            if self.int8:
+                self.pools[name] = jnp.zeros(shape, jnp.int8)
+                self.scale_pools[name] = jnp.ones(sshape, jnp.float32)
+            else:
+                self.pools[name] = jnp.zeros(shape, dt)
         self.requests: dict[str, SlotPages] = {}
         self.tails: dict[str, dict | None] = {}
         self._tail_res: dict[str, list[int]] = {}
@@ -262,6 +300,19 @@ class PagedKVStore:
         self.resident_peak = 0
         self.pages_used_peak = 0
         self.cow_copies = 0
+        # host-spill tier: rid -> page index -> {leaf: (page, *row) host rows}
+        self._spilled: dict[str, dict[int, dict[str, np.ndarray]]] = {}
+        self._pinned: set[str] = set()
+        self._lru: dict[str, int] = {}          # unpin stamps (cold order)
+        self._lru_tick = 0
+        self.spills = 0
+        self.rehydrates = 0
+        # fused decode needs every table entry to be a VALID page id even
+        # past a slot's coverage: one scratch page absorbs them (and the
+        # row writes of inactive slots)
+        self.scratch_page: int | None = None
+        if self.fused:
+            self.scratch_page = self.allocator.alloc()
 
     # -- gather/scatter through the UPD primitives ---------------------------
 
@@ -285,6 +336,22 @@ class PagedKVStore:
             return ops.cache_page_write(pool, rows, off)
         return _pref.page_write(pool, rows, off, page=self.page)
 
+    def _pool_gather(self, pool, ax, pids):
+        """(len(pids)*page, *row) rows for page ids ``pids``, either layout."""
+        if self.fused:
+            idx = (slice(None),) * ax + (jnp.asarray(pids, jnp.int32),)
+            g = jnp.moveaxis(pool[idx], (ax, ax + 1), (0, 1))
+            return g.reshape((len(pids) * self.page,) + g.shape[2:])
+        return self._gather(pool, self._offsets(pids))
+
+    def _pool_scatter(self, pool, ax, rows, pids):
+        if self.fused:
+            blocks = rows.astype(pool.dtype).reshape(
+                (len(pids), self.page) + rows.shape[1:])
+            idx = (slice(None),) * ax + (jnp.asarray(pids, jnp.int32),)
+            return pool.at[idx].set(jnp.moveaxis(blocks, (0, 1), (ax, ax + 1)))
+        return self._scatter(pool, rows, self._offsets(pids))
+
     # -- accounting (the admission/"budget" interface) -----------------------
 
     def pages_for_rows(self, rows: int) -> int:
@@ -294,12 +361,17 @@ class PagedKVStore:
         return data + self.tail_pages
 
     def pages_free(self) -> int:
-        """Pages allocatable RIGHT NOW: the free list plus every prefix-
-        store page no live request shares (evictable on demand)."""
-        return self.allocator.free_pages + self.prefix_store.evictable_pages()
+        """Pages allocatable RIGHT NOW: the free list, every prefix-store
+        page no live request shares (evictable on demand), and every cold
+        page the host-spill tier can reclaim — admission defers only when
+        none of the three can cover the request."""
+        return self.allocator.free_pages + self.prefix_store.evictable_pages() \
+            + self.spillable_pages()
 
     def hbm_bytes_resident(self) -> int:
-        return self.allocator.used_pages * self.page_bytes
+        used = self.allocator.used_pages - (1 if self.scratch_page is not None
+                                            else 0)
+        return used * self.page_bytes
 
     def resident_requests(self) -> int:
         return len(self.requests)
@@ -322,8 +394,11 @@ class PagedKVStore:
                 self._note_usage()
                 return page
             except PagesExhausted:
-                if not self.prefix_store.evict_one():
-                    raise
+                if self.prefix_store.evict_one():
+                    continue
+                if self._spill_one():
+                    continue
+                raise
 
     # -- request lifecycle ---------------------------------------------------
 
@@ -365,6 +440,7 @@ class PagedKVStore:
         self.requests[rid] = sp
         self.tails[rid] = tail
         self._tail_res[rid] = got_tail_res
+        self._pinned.add(rid)      # fresh requests are hot until parked
         self._note_usage()
         return shared_rows
 
@@ -379,13 +455,114 @@ class PagedKVStore:
 
     def free(self, rid: str) -> None:
         """Release every page reference ``rid`` holds (prefix-store copies
-        of shared pages survive through the store's own reference)."""
+        of shared pages survive through the store's own reference). Spilled
+        pages (-1 markers) hold no device reference — their host copies are
+        simply dropped."""
         sp = self.requests.pop(rid)
         for p in sp.pages:
-            self.allocator.release(p)
+            if p >= 0:
+                self.allocator.release(p)
         for p in self._tail_res.pop(rid, ()):
             self.allocator.release(p)
         self.tails.pop(rid, None)
+        self._spilled.pop(rid, None)
+        self._pinned.discard(rid)
+        self._lru.pop(rid, None)
+
+    # -- host-spill tier -----------------------------------------------------
+
+    def pin(self, rid: str) -> None:
+        """Mark ``rid`` hot (active in a lane or on the fused decode path):
+        its pages cannot spill, and any already-spilled pages rehydrate
+        immediately."""
+        self._pinned.add(rid)
+        self._lru.pop(rid, None)
+        self._rehydrate(rid)
+
+    def unpin(self, rid: str) -> None:
+        """Mark ``rid`` cold (parked): its exclusive data pages become
+        spill candidates, coldest-parked first."""
+        if rid not in self.requests:
+            return
+        self._pinned.discard(rid)
+        self._lru_tick += 1
+        self._lru[rid] = self._lru_tick
+
+    def _spill_candidates(self, rid: str) -> list[int]:
+        sp = self.requests[rid]
+        return [i for i in range(sp.n_shared, len(sp.pages))
+                if sp.pages[i] >= 0
+                and self.allocator.refcount(sp.pages[i]) == 1]
+
+    def spillable_pages(self) -> int:
+        """Device pages the spill tier could reclaim right now: unpinned
+        requests' exclusive (refcount-1, unshared) data pages."""
+        return sum(len(self._spill_candidates(rid))
+                   for rid in self.requests if rid not in self._pinned)
+
+    def spilled_pages(self) -> int:
+        return sum(len(d) for d in self._spilled.values())
+
+    def host_spill_bytes(self) -> int:
+        return self.spilled_pages() * self.page_bytes
+
+    def _spill_one(self) -> bool:
+        """Copy the coldest unpinned request's last exclusive data page to
+        host arrays and release its device page. Returns False when nothing
+        is spillable."""
+        cold = sorted((rid for rid in self.requests
+                       if rid not in self._pinned and
+                       self._spill_candidates(rid)),
+                      key=lambda r: self._lru.get(r, 0))
+        if not cold:
+            return False
+        rid = cold[0]
+        sp = self.requests[rid]
+        i = self._spill_candidates(rid)[-1]
+        pid = sp.pages[i]
+        host: dict[str, np.ndarray] = {}
+        for name in self.pools:
+            ax = self.paged[name][0]
+            host[name] = np.asarray(self._pool_gather(self.pools[name], ax,
+                                                      [pid]))
+            if self.int8:
+                host[f"{name}__scale"] = np.asarray(
+                    self._pool_gather(self.scale_pools[name], ax, [pid]))
+        self._spilled.setdefault(rid, {})[i] = host
+        sp.pages[i] = -1
+        self.allocator.release(pid)
+        self.spills += 1
+        return True
+
+    def _rehydrate(self, rid: str) -> None:
+        """Restore every spilled page of ``rid`` into fresh device pages
+        (touch-on-activate). The request is pinned for the duration so the
+        allocation fallback cannot spill it back out from under itself."""
+        spilled = self._spilled.get(rid)
+        if not spilled:
+            return
+        was_pinned = rid in self._pinned
+        self._pinned.add(rid)
+        try:
+            sp = self.requests[rid]
+            for i in sorted(spilled):
+                host = spilled[i]
+                fresh = self._alloc_page()
+                for name in self.pools:
+                    ax = self.paged[name][0]
+                    self.pools[name] = self._pool_scatter(
+                        self.pools[name], ax, jnp.asarray(host[name]),
+                        [fresh])
+                    if self.int8:
+                        self.scale_pools[name] = self._pool_scatter(
+                            self.scale_pools[name], ax,
+                            jnp.asarray(host[f"{name}__scale"]), [fresh])
+                sp.pages[i] = fresh
+                self.rehydrates += 1
+            del self._spilled[rid]
+        finally:
+            if not was_pinned:
+                self._pinned.discard(rid)
 
     # -- data movement -------------------------------------------------------
 
@@ -399,15 +576,16 @@ class PagedKVStore:
             if self.allocator.refcount(pid) <= 1:
                 continue
             fresh = self._alloc_page()
-            old = self._offsets([pid])
-            new = self._offsets([fresh])
             for name in self.pools:
-                rows = self._gather(self.pools[name], old)
-                self.pools[name] = self._scatter(self.pools[name], rows, new)
+                ax = self.paged[name][0]
+                rows = self._pool_gather(self.pools[name], ax, [pid])
+                self.pools[name] = self._pool_scatter(self.pools[name], ax,
+                                                      rows, [fresh])
                 if self.int8:
-                    srows = self._gather(self.scale_pools[name], old)
-                    self.scale_pools[name] = self._scatter(
-                        self.scale_pools[name], srows, new)
+                    srows = self._pool_gather(self.scale_pools[name], ax,
+                                              [pid])
+                    self.scale_pools[name] = self._pool_scatter(
+                        self.scale_pools[name], ax, srows, [fresh])
             self.allocator.release(pid)
             sp.pages[i] = fresh
             sp.n_shared = min(sp.n_shared, i)
@@ -431,9 +609,10 @@ class PagedKVStore:
             raise ValueError(f"write [{row0},{row1}) beyond {rid!r}'s "
                              f"{len(sp.pages)} pages")
         self._cow(sp, p0, p1)
-        off = self._offsets(sp.pages[p0:p1])
+        pids = sp.pages[p0:p1]
         need = (p1 - p0) * self.page
         for name in self.pools:
+            ax = self.paged[name][0]
             rows = rows_by_leaf[name]
             if rows.shape[0] < need:
                 pad = jnp.zeros((need - rows.shape[0],) + rows.shape[1:],
@@ -441,11 +620,13 @@ class PagedKVStore:
                 rows = jnp.concatenate([rows, pad], axis=0)
             if self.int8:
                 q, scale = quantize_absmax_int8(rows)
-                self.pools[name] = self._scatter(self.pools[name], q, off)
-                self.scale_pools[name] = self._scatter(
-                    self.scale_pools[name], scale, off)
+                self.pools[name] = self._pool_scatter(self.pools[name], ax,
+                                                      q, pids)
+                self.scale_pools[name] = self._pool_scatter(
+                    self.scale_pools[name], ax, scale, pids)
             else:
-                self.pools[name] = self._scatter(self.pools[name], rows, off)
+                self.pools[name] = self._pool_scatter(self.pools[name], ax,
+                                                      rows, pids)
 
     def snapshot_tail(self, donor: dict) -> dict:
         """Host copies of the tail leaves (donation-safe: the donor buffer
@@ -474,19 +655,25 @@ class PagedKVStore:
 
     def load_donor(self, rid: str, donor: dict) -> dict:
         """Gather the request's pages (and tail snapshot) back into a
-        freshly zeroed donor — the parked-request activation path. Full
-        precision pages round-trip bit-exactly; int8 pages dequantize."""
+        freshly zeroed donor — the parked-request activation path (and the
+        fused engine's explicit lane fallback). Full precision pages
+        round-trip bit-exactly; int8 pages dequantize. Donor templates
+        without the paged leaves (a fused engine restoring tails only)
+        skip the gather entirely."""
+        self._rehydrate(rid)
         sp = self.requests[rid]
         out = dict(donor)
-        if self.paged and sp.pages and sp.fill:
-            off = self._offsets(sp.pages)
-            for name, (ax, _, dt) in self.paged.items():
+        want = [n for n in self.paged if n in out]
+        if want and sp.pages and sp.fill:
+            for name in want:
+                ax, _, dt = self.paged[name]
                 if self.int8:
-                    q = self._gather(self.pools[name], off)
-                    s = self._gather(self.scale_pools[name], off)
+                    q = self._pool_gather(self.pools[name], ax, sp.pages)
+                    s = self._pool_gather(self.scale_pools[name], ax,
+                                          sp.pages)
                     rows = dequantize_absmax_int8(q, s, dtype=dt)
                 else:
-                    rows = self._gather(self.pools[name], off)
+                    rows = self._pool_gather(self.pools[name], ax, sp.pages)
                 n_rows = out[name].shape[ax]
                 rows = rows[:min(sp.fill, n_rows)]
                 full = jnp.zeros((n_rows,) + rows.shape[1:], dt)
@@ -498,6 +685,38 @@ class PagedKVStore:
                 _, dt = self.tail_leaves[name]
                 out[name] = jnp.asarray(arr, dt)
         return out
+
+    # -- fused-decode interface ----------------------------------------------
+
+    def device_pools(self) -> dict:
+        """The device-resident pool arrays, keyed by leaf name (int8 scale
+        pools ride along as ``{leaf}__scale``) — the engine threads these
+        through its donated jitted step calls."""
+        out = dict(self.pools)
+        out.update({f"{n}__scale": s for n, s in self.scale_pools.items()})
+        return out
+
+    def set_device_pools(self, pools: dict) -> None:
+        """Adopt the pool arrays a jitted step returned (the donated,
+        in-place-updated successors of :meth:`device_pools`)."""
+        for n in self.pools:
+            self.pools[n] = pools[n]
+        for n in self.scale_pools:
+            self.scale_pools[n] = pools[f"{n}__scale"]
+
+    def table_row(self, rid: str, width: int) -> np.ndarray:
+        """``rid``'s block-table row, padded to ``width`` entries with the
+        scratch page (every entry must be a valid page id — the fused
+        kernels' index maps fetch unconditionally). The request must be
+        pinned/rehydrated: spilled pages have no device identity."""
+        sp = self.requests[rid]
+        pages = sp.pages[:width]
+        if any(p < 0 for p in pages):
+            raise ValueError(f"request {rid!r} has spilled pages — pin() "
+                             "before building its table row")
+        row = np.full((width,), self.scratch_page, np.int32)
+        row[:len(pages)] = pages
+        return row
 
     def publish_prefix(self, rid: str, key: str, *, n_rows: int,
                        tail: dict | None) -> bool:

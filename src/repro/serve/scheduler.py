@@ -412,8 +412,11 @@ class PagedAdmission(CostModelAdmission):
     max-bucket cache reservation (a lane IS that reservation). With paged
     memory the honest price is the pages the request's PROMPT needs at
     attach (decode growth is paid step by step, with preemption as the
-    backstop), against the pages allocatable right now — the free list plus
-    every evictable prefix-store page. ``budget`` is any object with
+    backstop), against the pages allocatable right now — the free list, every
+    evictable prefix-store page, AND every host-spillable page (cold unpinned
+    requests' exclusive pages: the spill tier evicts them to host RAM on
+    demand and rehydrates on next touch, so they are reclaimable without
+    losing the request). ``budget`` is any object with
     ``pages_for_rows(rows)`` and ``pages_free()`` (the
     :class:`repro.serve.paging.PagedKVStore` interface; tests inject fakes).
 

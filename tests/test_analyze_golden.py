@@ -131,6 +131,28 @@ testing:
     implementation: |
       pass
 ...
+---
+primitive_name: "bad_block"
+group: "fixture"
+brief: "fused block_k candidate incompatible with a page-size candidate -> TSL033."
+parameters:
+  - {name: "q", ctype: "register"}
+  - {name: "pool", ctype: "register"}
+  - {name: "tables", ctype: "register"}
+returns: {ctype: "register"}
+serve: {block_k: 48, block_ks: [48, 64]}
+definitions:
+  - target_extension: "minitgt"
+    ctype: ["float32"]
+    lscpu_flags: ["xla"]
+    implementation: |
+      return q
+testing:
+  - name: "t"
+    requires: []
+    implementation: |
+      pass
+...
 """
 
 
@@ -206,6 +228,24 @@ def test_misaligned_page_size_is_tsl033(golden):
     assert hits and all(f["severity"] == "warn" for f in hits)
     assert any("candidate 10" in f["message"] for f in hits)
     assert not any("candidate 64" in f["message"] for f in hits)
+    assert all(f["location"] == "target:minitgt" for f in hits)
+
+
+def test_incompatible_block_k_is_tsl033(golden):
+    # bad_block declares block_ks [48, 64] while bad_page publishes
+    # page-size candidates [10, 64] on the same target: 48 is incompatible
+    # with both (neither divides), 64 with 10 only — 64 x 64 must NOT fire
+    _, data, _ = golden
+    hits = [f for f in _active(data, "TSL033")
+            if f["subject"] == "primitive:bad_block"]
+    assert hits and all(f["severity"] == "warn" for f in hits)
+    msgs = [f["message"] for f in hits]
+    assert any("block_k candidate 48" in m and "page-size candidate 64" in m
+               for m in msgs)
+    assert any("block_k candidate 64" in m and "page-size candidate 10" in m
+               for m in msgs)
+    assert not any("block_k candidate 64" in m and "page-size candidate 64" in m
+                   for m in msgs)
     assert all(f["location"] == "target:minitgt" for f in hits)
 
 

@@ -1,0 +1,176 @@
+"""Fused paged attention tests (ISSUE 9).
+
+The tentpole equivalence pin: with ``PagedConfig(fused=True)`` the engine
+decodes and verifies KV-family slots DIRECTLY against the page pool through
+the block table (``attention_decode_paged`` / ``attention_verify_paged``) —
+and must emit exactly the tokens of the PR 8 lane-activated fallback
+(``fused=False``), greedy AND sampled, through mid-stream slot reuse,
+copy-on-write shared prefix pages, and speculative verify/commit. Plus the
+host-spill tier: cold unshared pages evicted to host arrays under a tight
+page budget must rehydrate bit-exactly (token-for-token vs the contiguous
+engine, with at least one spill/rehydrate cycle observed), int8 fused pools
+honour the absmax/254 bound, and the recurrent family with no paged leaves
+(rwkv) falls back to lanes automatically.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.dist.compression import dequantize_absmax_int8
+from repro.serve import (PagedConfig, PagedKVStore, Request, SamplingConfig,
+                         ServeEngine)
+from repro.serve.spec import SpeculationConfig
+
+
+def _requests(cfg, gen_lens, prompt_len=8, seed=0, stagger=0.05, prefix=None,
+              enc_len=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, g in enumerate(gen_lens):
+        toks = rng.integers(0, cfg.vocab, prompt_len).astype(np.int32)
+        if prefix is not None:
+            toks[:len(prefix)] = prefix
+        r = Request(rid=f"r{i}", tokens=toks, gen_len=g, arrival_s=i * stagger,
+                    shared_prefix_len=len(prefix) if prefix is not None
+                    else None)
+        if cfg.family == "vlm":
+            r.embeds = np.ones((cfg.vision_prefix, cfg.d_model), np.float32)
+        if cfg.family == "audio":
+            r.embeds = np.ones((enc_len, cfg.d_model), np.float32)
+        out.append(r)
+    return out
+
+
+def _run(cfg, reqs, *, fused, enc_len=None, max_len=24, seed=0,
+         sampling=None, speculation=None, **pkw):
+    jax.clear_caches()
+    eng = ServeEngine(cfg, batch=2, max_len=max_len, seed=seed,
+                      enc_len=enc_len, sampling=sampling,
+                      speculation=speculation,
+                      paged=PagedConfig(fused=fused, **pkw))
+    return eng.run([Request(**vars(r)) for r in reqs])
+
+
+@pytest.mark.parametrize("arch,enc_len", [("qwen1.5-0.5b", None),
+                                          ("zamba2-7b", None),
+                                          ("whisper-tiny", 8),
+                                          ("internvl2-2b", None)])
+def test_fused_matches_lane_all_kv_families(arch, enc_len):
+    """4 staggered requests on 2 lanes, greedy: the fused engine (tails-only
+    activation, decode through the block table, mid-stream slot reuse) emits
+    exactly the lane-activated engine's tokens — and never gathers pages
+    into a lane (lane_activations == 0, tail restores observed)."""
+    cfg = get_config(arch).reduced()
+    max_len = 24 + (cfg.vision_prefix if cfg.family == "vlm" else 0)
+    reqs = _requests(cfg, [5, 4, 4, 3], enc_len=enc_len)
+    want = _run(cfg, reqs, fused=False, enc_len=enc_len, max_len=max_len)
+    got = _run(cfg, reqs, fused=True, enc_len=enc_len, max_len=max_len)
+    assert got["outputs"] == want["outputs"]
+    assert got["paged"]["fused"] and not want["paged"]["fused"]
+    assert got["paged"]["lane_activations"] == 0
+    assert got["paged"]["tail_restores"] > 0       # park -> reactivate ran
+    assert got["paged"]["gather_bytes_eliminated"] > 0
+    assert got["paged"]["resident_requests_peak"] > 2
+
+
+def test_fused_sampled_matches_lane():
+    """Sampled decoding (temperature + top-k) draws the SAME per-step keys:
+    the fused pool read must not change a single draw vs lane activation."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    samp = SamplingConfig(temperature=0.8, top_k=16)
+    reqs = _requests(cfg, [6, 5], seed=2)
+    want = _run(cfg, reqs, fused=False, sampling=samp, prefix_sharing=False)
+    got = _run(cfg, reqs, fused=True, sampling=samp, prefix_sharing=False)
+    assert got["outputs"] == want["outputs"]
+
+
+def test_fused_cow_shared_prefix_pages():
+    """Prefix sharing under fused decode: sharers read the published pages
+    through their block tables (CoW keeps them immutable) and still emit the
+    lane engine's tokens, prefill-once preserved."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    rng = np.random.default_rng(7)
+    system = rng.integers(0, cfg.vocab, 16).astype(np.int32)
+    reqs = _requests(cfg, [3, 3, 3, 3], prompt_len=24, seed=8, prefix=system)
+    want = _run(cfg, reqs, fused=False, max_len=48, page_size=16)
+    got = _run(cfg, reqs, fused=True, max_len=48, page_size=16)
+    assert got["outputs"] == want["outputs"]
+    assert got["paged"]["prefix_hits"] == 3
+    assert got["paged"]["prefix_misses"] == 1
+
+
+def test_fused_speculative_matches_lane():
+    """Draft/verify through attention_verify_paged (and the zamba commit
+    replay through the fused span) emits exactly the lane engine's tokens."""
+    for arch in ("qwen1.5-0.5b", "zamba2-7b"):
+        cfg = get_config(arch).reduced()
+        reqs = _requests(cfg, [8, 8, 6], seed=3)
+        spec = SpeculationConfig(drafter="ngram", k_max=3, fixed_k=2)
+        want = _run(cfg, reqs, fused=False, max_len=32, speculation=spec)
+        got = _run(cfg, reqs, fused=True, max_len=32, speculation=spec)
+        assert got["outputs"] == want["outputs"], arch
+        assert got["spec"]["verify_steps"] > 0
+
+
+def test_spill_rehydrate_exact_tokens():
+    """A page budget too small for five resident requests forces the spill
+    tier: cold parked pages move to host arrays and rehydrate on
+    reactivation — tokens must still match the contiguous engine exactly,
+    with at least one full spill/rehydrate cycle observed."""
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    reqs = _requests(cfg, [4, 4, 4, 4, 4], stagger=0.02, seed=9)
+    jax.clear_caches()
+    want = ServeEngine(cfg, batch=2, max_len=24, seed=0).run(
+        [Request(**vars(r)) for r in reqs])
+    probe = PagedConfig(page_size=8)
+    jax.clear_caches()
+    pb = ServeEngine(cfg, batch=2, max_len=24, seed=0,
+                     paged=probe)._store.page_bytes
+    got = _run(cfg, reqs, fused=True, page_size=8, hbm_budget_bytes=5 * pb)
+    assert got["outputs"] == want["outputs"]
+    assert got["paged"]["spills"] >= 1
+    assert got["paged"]["rehydrates"] >= 1
+    assert got["paged"]["host_spill_bytes"] == 0   # everything came back
+
+
+def test_rwkv_falls_back_to_lanes():
+    """No paged leaves -> no fused contract: the engine must flag
+    fused=False and keep emitting the contiguous engine's tokens through
+    the lane path."""
+    cfg = get_config("rwkv6-7b").reduced()
+    reqs = _requests(cfg, [5, 4, 4, 3])
+    jax.clear_caches()
+    want = ServeEngine(cfg, batch=2, max_len=24, seed=0).run(
+        [Request(**vars(r)) for r in reqs])
+    got = _run(cfg, reqs, fused=True)
+    assert got["outputs"] == want["outputs"]
+    assert not got["paged"]["fused"]
+    assert got["paged"]["lane_activations"] > 0
+
+
+def test_int8_fused_pool_absmax_bound():
+    """int8 fused pools: rows written through store_donor guarantee
+    |dequantized - original| <= absmax(row)/254 per last-axis row — the
+    same bound the lane-path store pins, now on the (KH, NP, page, D)
+    fused pool layout with its per-row scale pools."""
+    rng = np.random.default_rng(3)
+    shapes = {"k": jax.ShapeDtypeStruct((1, 2, 32, 8), np.float32)}
+    st = PagedKVStore(shapes, {"k": 2}, page_size=8, n_pages=8, int8=True,
+                      fused=True)
+    donor = {"k": np.asarray(rng.normal(size=(1, 2, 32, 8)), np.float32)}
+    st.attach("a", prompt_rows=32)
+    st.store_donor("a", {n: jax.numpy.asarray(v) for n, v in donor.items()},
+                   fill=32)
+    pools = st.device_pools()
+    tab = st.table_row("a", 4)
+    # pool (1, KH, NP, page, D): token axis split in place at ax=2 — walk
+    # the request's table to get its rows back in donor order
+    kq = np.asarray(pools["k"])[0][:, tab[:4]].reshape(2, 32, 8)
+    ks = np.asarray(pools["k__scale"])[0][:, tab[:4]].reshape(2, 32, 1)
+    deq = np.asarray(dequantize_absmax_int8(kq, ks, dtype=np.float32))
+    want = donor["k"][0]                           # (KH, 32, 8)
+    err = np.abs(deq - want)
+    bound = np.abs(want).max(-1, keepdims=True) / 254.0 + 1e-7
+    assert (err <= bound).all()

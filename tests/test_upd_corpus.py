@@ -12,6 +12,9 @@ FRAMEWORK_OPS = {
     "rope_apply", "flash_attention", "attention_decode", "token_shift",
     "causal_conv1d", "ssd_scan", "ssd_chunked", "ssd_decode", "wkv6_scan",
     "wkv6_decode", "topk_gating", "moe_dispatch", "moe_combine", "expert_ffn",
+    # fused paged attention (ISSUE 9): the nn layer decodes/verifies straight
+    # off the page pool through the block table
+    "attention_decode_paged", "attention_verify_paged",
     # paper case-study surface (Fig 8) used by tests/benchmarks
     "set", "set1", "load", "select", "between_inclusive", "hadd",
     "to_integral", "range_count", "range_count_popcnt",
