@@ -1,0 +1,100 @@
+"""Mesh-sharded serving demo: the slot-table engine on a (data=2, model=4)
+``jax.sharding`` mesh, producing tokens IDENTICAL to the 1-device engine.
+
+Parameters shard by the ``repro.dist.sharding`` rules (row/col TP on the
+``model`` axis, output-projection flip, replicated norms); slot-table state
+shards batch-on-``data`` / sequence-on-``model`` per the family's declared
+page axes. The per-step jits compile once against ``NamedSharding``-annotated
+donors, so every steady-state step runs with ZERO resharding (asserted from
+the report's audit counter), and the paged prefix store still dedups the
+shared system prompt across the mesh.
+
+Runs on CPU with simulated devices — the XLA flag must be set before jax
+initializes:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/serve_sharded.py
+"""
+
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import Mesh  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.serve import PagedConfig, Request, ServeEngine  # noqa: E402
+
+N_REQUESTS = 6
+SYSTEM_LEN = 16          # shared system prompt, page-aligned (page_size=8)
+UNIQUE_LEN = 5
+GEN_LEN = 5
+MAX_LEN = 64
+PAGE = 8
+
+
+def make_requests(cfg):
+    rng = np.random.default_rng(0)
+    system = rng.integers(0, cfg.vocab, SYSTEM_LEN).astype(np.int32)
+    reqs = []
+    for i in range(N_REQUESTS):
+        toks = np.concatenate(
+            [system, rng.integers(0, cfg.vocab, UNIQUE_LEN).astype(np.int32)])
+        reqs.append(Request(rid=f"r{i}", tokens=toks, gen_len=GEN_LEN,
+                            shared_prefix_len=SYSTEM_LEN))
+    return reqs
+
+
+def run(cfg, mesh):
+    jax.clear_caches()
+    eng = ServeEngine(cfg, batch=2, max_len=MAX_LEN, seed=0, mesh=mesh,
+                      paged=PagedConfig(prefix_sharing=True, fused=True,
+                                        page_size=PAGE))
+    rep = eng.run(make_requests(cfg))
+    return {rid: tuple(t) for rid, t in rep["outputs"].items()}, rep
+
+
+def main():
+    assert len(jax.devices()) >= 8, (
+        "need XLA_FLAGS=--xla_force_host_platform_device_count=8, got "
+        f"{len(jax.devices())} device(s)")
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    mesh = Mesh(np.array(jax.devices()[:8]).reshape(2, 4), ("data", "model"))
+
+    base, _ = run(cfg, mesh=None)
+    toks, rep = run(cfg, mesh=mesh)
+
+    m = rep["mesh"]
+    print(f"[example] mesh axes {m['axes']} = {m['shards']} shards, "
+          f"{m['param_bytes_per_shard'] / 1e3:.1f} kB params/shard, "
+          f"{m['hbm_resident_bytes_per_shard'] / 1e3:.1f} kB resident/shard")
+    print(f"[example] collective traffic {m['comms_bytes_per_step'] / 1e3:.1f} "
+          f"kB/step over the model axis (UPD 'comms' term)")
+
+    # the headline: token-for-token identical to the 1-device engine
+    assert toks == base, "mesh outputs diverged from 1-device outputs"
+    print(f"[example] {N_REQUESTS} requests token-for-token identical "
+          f"to the 1-device engine ({GEN_LEN} tokens each)")
+
+    # compiled once against rule-sharded donors: zero steady-state resharding
+    assert m["reshard_events"] == 0, m
+    print("[example] reshard events: 0 (donors pinned to the rule shardings)")
+
+    # prefix sharing keeps working across the mesh
+    pg = rep["paged"]
+    assert pg["prefix_hits"] >= 1, pg
+    assert pg["prefix_hits"] == N_REQUESTS - 1, pg
+    print(f"[example] prefix store on-mesh: {pg['prefix_hits']} hits / "
+          f"{pg['prefix_misses']} miss (system prompt prefilled once)")
+
+
+if __name__ == "__main__":
+    main()

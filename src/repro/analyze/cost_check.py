@@ -13,9 +13,10 @@ finding instead of a runtime surprise:
 * every free symbol must be bound by the primitive's declared ``cost_shapes``
   vocabulary — the keyword set callers are expected to pass (TSL012; a
   cost-carrying primitive without the declaration gets TSL013);
-* the primitives the serving scheduler prices must land BOTH a ``flops``
-  and a ``bytes`` term in the generated ``_cost.py`` of every target, for
-  every candidate bench selection could pick (TSL014).
+* the primitives the serving scheduler prices must land a ``flops``, a
+  ``bytes`` AND a ``comms`` term in the generated ``_cost.py`` of every
+  target, for every candidate bench selection could pick (TSL014 — the
+  ``comms`` term prices per-step collective bytes for mesh-sharded serving).
 """
 
 from __future__ import annotations
@@ -28,11 +29,11 @@ from .findings import AnalysisReport
 # primitives whose cost terms serve/scheduler.py consumes for admission;
 # every servable target's generated package must price all of them
 PRICED_PRIMITIVES: dict[str, tuple[str, ...]] = {
-    "attention_decode": ("flops", "bytes"),
-    "attention_prefill_chunk": ("flops", "bytes"),
-    "attention_verify": ("flops", "bytes"),
-    "ssd_scan": ("flops", "bytes"),
-    "wkv6_scan": ("flops", "bytes"),
+    "attention_decode": ("flops", "bytes", "comms"),
+    "attention_prefill_chunk": ("flops", "bytes", "comms"),
+    "attention_verify": ("flops", "bytes", "comms"),
+    "ssd_scan": ("flops", "bytes", "comms"),
+    "wkv6_scan": ("flops", "bytes", "comms"),
 }
 
 _ALLOWED_BINOPS = (ast.Add, ast.Sub, ast.Mult, ast.Div, ast.FloorDiv,

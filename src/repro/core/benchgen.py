@@ -30,9 +30,13 @@ _PRELUDE = (
 
 
 def _bench_store(ctx: GenerationResult) -> ArtifactCache:
-    from .library import DEFAULT_BUILD_ROOT
+    from .library import DEFAULT_BUILD_ROOT, artifact_key, resolve_store
 
-    return ArtifactCache(ctx.config.build_root or DEFAULT_BUILD_ROOT)
+    key = artifact_key(ctx.config, ctx.meta.get("fingerprint", "x"),
+                       ctx.corpus)
+    store, _ = resolve_store(ctx.config, key,
+                             ctx.config.build_root or DEFAULT_BUILD_ROOT)
+    return store
 
 
 def _compile_candidate(ctx: GenerationResult, prim, impl, ctype: str):

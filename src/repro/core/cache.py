@@ -20,13 +20,35 @@ Layout under the cache root (default ``build/tsl/``)::
     pkg/<package>_<target>_<digest>/   generated library packages
     bench/<target>_<digest>.json       bench-selection winners
     index.json                         digest -> key components (introspection)
+
+SHARED store-root mode (``shared=True``, or ``TSL_STORE_ROOT`` pointing many
+processes at one directory) keeps the same content addresses but hardens
+every write for concurrency, so a fleet generates and bench-warms each
+kernel exactly once:
+
+* packages land under a per-hardware-key namespace
+  (``pkg/<hw-namespace>/...``) so heterogeneous machines share one root
+  without scanning each other's artifacts;
+* ``commit`` stages the package in a private temp dir and publishes it with
+  one atomic ``os.rename`` — readers only ever see complete packages, and
+  when two writers race the first rename wins while the loser adopts it;
+* ``acquire_writer`` is an ``O_CREAT | O_EXCL`` lockfile (the same
+  single-publisher discipline as the serve-layer prefix store): exactly one
+  process runs the generation, everyone else ``wait_for``s the publish and
+  takes the warm hit;
+* bench winners and the index are written via temp-file + ``os.replace``
+  (the index is additionally rebuilt from the per-package key stamps on
+  read, so lost update races cost introspection nothing).
 """
 
 from __future__ import annotations
 
 import hashlib
 import json
+import os
 import shutil
+import tempfile
+import time
 from dataclasses import dataclass
 from pathlib import Path
 from typing import Iterable
@@ -69,6 +91,17 @@ class CacheKey:
         return CacheKey(self.fingerprint, self.target, self.hardware_flags,
                         self.generator_version, "")
 
+    def hw_namespace(self) -> str:
+        """Shared-store namespace: a machine-class address. Everything probed
+        hardware decides (flags + generator schema) folds in; the corpus
+        fingerprint does NOT — a fleet mid-rollout keeps old and new corpus
+        artifacts side by side in one namespace."""
+        h = hashlib.sha256()
+        for part in (",".join(self.hardware_flags), self.generator_version):
+            h.update(part.encode())
+            h.update(b"\0")
+        return f"hw_{h.hexdigest()[:12]}"
+
 
 def variant_digest(config) -> str:
     """Digest of the generation knobs that change the package *content*
@@ -82,21 +115,32 @@ def variant_digest(config) -> str:
 
 
 class ArtifactCache:
-    """Filesystem-backed store; one instance per cache root."""
+    """Filesystem-backed store; one instance per cache root.
 
-    def __init__(self, root: Path | str):
+    ``shared=True`` switches every write to the multi-process protocol
+    (atomic publish-by-rename, lockfile writer election, namespace
+    sub-directories) — see the module docstring. ``namespace`` is the
+    per-hardware-key sub-directory (:meth:`CacheKey.hw_namespace`); it
+    defaults to flat layout for single-process roots."""
+
+    def __init__(self, root: Path | str, *, shared: bool = False,
+                 namespace: str = ""):
         self.root = Path(root)
+        self.shared = shared
+        self.namespace = namespace
 
     # -- layout --------------------------------------------------------------
 
     @property
     def package_root(self) -> Path:
         """Importable package directory (this path goes on ``sys.path``)."""
-        return self.root / "pkg"
+        return self.root / "pkg" / self.namespace if self.namespace \
+            else self.root / "pkg"
 
     @property
     def bench_root(self) -> Path:
-        return self.root / "bench"
+        return self.root / "bench" / self.namespace if self.namespace \
+            else self.root / "bench"
 
     def package_name(self, base: str, key: CacheKey) -> str:
         return f"{base}_{key.target}_{key.digest()[:10]}"
@@ -113,20 +157,94 @@ class ArtifactCache:
         return d if (d / "_manifest.json").exists() else None
 
     def commit(self, name: str, key: CacheKey, files: Iterable) -> Path:
-        """Write a generated file set as package ``name`` and stamp it."""
+        """Write a generated file set as package ``name`` and stamp it.
+
+        Shared mode publishes by rename: the whole package is staged in a
+        private temp dir next to ``pkg/`` and moved into place with ONE
+        atomic ``os.rename`` — a concurrent reader sees either nothing or a
+        complete, stamped package, never a partial write. If another writer
+        already published (we lost a race), the staging copy is discarded
+        and the winner's package adopted."""
         pkg_dir = self.package_dir(name)
-        pkg_dir.mkdir(parents=True, exist_ok=True)
+        if self.shared:
+            self.package_root.mkdir(parents=True, exist_ok=True)
+            stage = Path(tempfile.mkdtemp(prefix=f".{name}.stage.",
+                                          dir=self.package_root))
+            write_dir = stage
+        else:
+            pkg_dir.mkdir(parents=True, exist_ok=True)
+            write_dir = pkg_dir
         for f in files:
-            out = pkg_dir / f.relpath
+            out = write_dir / f.relpath
             out.parent.mkdir(parents=True, exist_ok=True)
             out.write_text(f.content)
-        (pkg_dir / "_cache_key.json").write_text(
+        (write_dir / "_cache_key.json").write_text(
             json.dumps(key.as_dict(), indent=1))
-        if not (pkg_dir / "_manifest.json").exists():
+        if not (write_dir / "_manifest.json").exists():
             # emit_build=False still needs the commit stamp
-            (pkg_dir / "_manifest.json").write_text("{}")
+            (write_dir / "_manifest.json").write_text("{}")
+        if self.shared:
+            try:
+                os.rename(stage, pkg_dir)
+            except OSError:
+                # a concurrent writer won the publish; adopt its package
+                shutil.rmtree(stage, ignore_errors=True)
+                if self.lookup(name) is None:
+                    raise
         self._index_put(name, key)
         return pkg_dir
+
+    # -- shared-store writer election -----------------------------------------
+
+    @property
+    def _lock_root(self) -> Path:
+        return self.root / "locks" / self.namespace if self.namespace \
+            else self.root / "locks"
+
+    def _lock_path(self, name: str) -> Path:
+        return self._lock_root / f"{name}.lock"
+
+    def acquire_writer(self, name: str, *, stale_s: float = 600.0) -> bool:
+        """Try to become THE generator for ``name`` (``O_CREAT | O_EXCL``
+        lockfile — the prefix-store publisher discipline across processes).
+        Returns False when another live process holds the build; a lock
+        older than ``stale_s`` (crashed writer) is broken and retaken."""
+        self._lock_root.mkdir(parents=True, exist_ok=True)
+        path = self._lock_path(name)
+        for _ in range(2):
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+            except FileExistsError:
+                try:
+                    if time.time() - path.stat().st_mtime > stale_s:
+                        path.unlink(missing_ok=True)
+                        continue
+                except OSError:
+                    continue    # holder released between the open and stat
+                return False
+            with os.fdopen(fd, "w") as fh:
+                fh.write(str(os.getpid()))
+            return True
+        return False
+
+    def release_writer(self, name: str) -> None:
+        self._lock_path(name).unlink(missing_ok=True)
+
+    def wait_for(self, name: str, *, timeout_s: float = 600.0,
+                 poll_s: float = 0.05) -> Path | None:
+        """Block until the elected writer publishes ``name`` (warm-hit path
+        of every non-writer process). None on timeout OR once the lock
+        disappears without a publish (writer failed) — callers then retry
+        the election themselves."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            hit = self.lookup(name)
+            if hit is not None:
+                return hit
+            if not self._lock_path(name).exists():
+                return self.lookup(name)
+            time.sleep(poll_s)
+        return None
 
     # -- bench winners ---------------------------------------------------------
 
@@ -146,7 +264,15 @@ class ArtifactCache:
     def bench_store(self, key: CacheKey, data: dict) -> Path:
         p = self.bench_path(key)
         p.parent.mkdir(parents=True, exist_ok=True)
-        p.write_text(json.dumps(data, indent=1))
+        if self.shared:
+            # atomic single-file publish: measured winners from two racing
+            # warmers are each internally consistent; last replace wins
+            fd, tmp = tempfile.mkstemp(prefix=f".{p.name}.", dir=p.parent)
+            with os.fdopen(fd, "w") as fh:
+                fh.write(json.dumps(data, indent=1))
+            os.replace(tmp, p)
+        else:
+            p.write_text(json.dumps(data, indent=1))
         return p
 
     # -- index / maintenance ----------------------------------------------------
@@ -156,22 +282,41 @@ class ArtifactCache:
         return self.root / "index.json"
 
     def _index(self) -> dict:
-        if not self._index_path.exists():
-            return {}
-        try:
-            return json.loads(self._index_path.read_text())
-        except json.JSONDecodeError:
-            return {}
+        idx = {}
+        if self._index_path.exists():
+            try:
+                idx = json.loads(self._index_path.read_text())
+            except json.JSONDecodeError:
+                idx = {}
+        if self.shared and self.package_root.is_dir():
+            # authoritative source in shared mode is the per-package key
+            # stamp — an index write lost to a concurrent replace costs
+            # nothing on read
+            for pkg in self.package_root.iterdir():
+                stamp = pkg / "_cache_key.json"
+                if pkg.name not in idx and stamp.exists():
+                    try:
+                        idx[pkg.name] = json.loads(stamp.read_text())
+                    except json.JSONDecodeError:
+                        pass
+        return idx
 
     def _index_put(self, name: str, key: CacheKey) -> None:
         idx = self._index()
         idx[name] = key.as_dict()
         self.root.mkdir(parents=True, exist_ok=True)
-        self._index_path.write_text(json.dumps(idx, indent=1))
+        if self.shared:
+            fd, tmp = tempfile.mkstemp(prefix=".index.", dir=self.root)
+            with os.fdopen(fd, "w") as fh:
+                fh.write(json.dumps(idx, indent=1))
+            os.replace(tmp, self._index_path)
+        else:
+            self._index_path.write_text(json.dumps(idx, indent=1))
 
     def stats(self) -> dict:
         pkgs = sorted(p.name for p in self.package_root.iterdir()
-                      if p.is_dir()) if self.package_root.is_dir() else []
+                      if p.is_dir() and not p.name.startswith(".")) \
+            if self.package_root.is_dir() else []
         benches = sorted(p.name for p in self.bench_root.glob("*.json")) \
             if self.bench_root.is_dir() else []
         return {
@@ -205,7 +350,7 @@ class ArtifactCache:
         idx = self._index()
         if self.package_root.is_dir():
             for pkg in list(self.package_root.iterdir()):
-                if not pkg.is_dir():
+                if not pkg.is_dir() or pkg.name.startswith("."):
                     continue
                 stamp = pkg / "_cache_key.json"
                 mtime = (stamp if stamp.exists() else pkg).stat().st_mtime

@@ -76,6 +76,50 @@ def _cmd_corpus(args) -> int:
     return 0
 
 
+def _repo_root() -> Path:
+    # src/repro/core/cli.py -> src/repro/core -> src/repro -> src -> repo
+    return Path(__file__).resolve().parents[3]
+
+
+def _diff_bench_winners(trajectory: dict, fresh: dict) -> list[str]:
+    """Selection regressions between a checked-in bench trajectory and a
+    fresh sweep of the same target. The benched SURFACE (which
+    primitive/ctype pairs are benched, with which candidate sets) must match
+    exactly — a mismatch means the corpus changed without refreshing the
+    trajectory. A WINNER change only fails when the fresh measurement shows
+    the recorded winner clearly losing (>= 1.5x slower than the new winner):
+    near-ties flip on timing noise and must not flake CI."""
+    problems: list[str] = []
+    old, new = trajectory.get("winners", {}), fresh.get("winners", {})
+    for key in sorted(set(old) | set(new)):
+        if key not in new:
+            problems.append(f"{key}: benched in trajectory, not benched now")
+            continue
+        if key not in old:
+            problems.append(f"{key}: newly benched; refresh the trajectory "
+                            "(python -m repro.core bench --report)")
+            continue
+        o, n = old[key], new[key]
+        if o["candidates"] != n["candidates"]:
+            problems.append(f"{key}: candidate set changed "
+                            f"{o['candidates']} -> {n['candidates']}; "
+                            "refresh the trajectory")
+            continue
+        if o["winner"] == n["winner"]:
+            continue
+        times = dict(zip(n["candidates"], n["times_us"]))
+        t_old, t_new = times.get(o["winner"]), times.get(n["winner"])
+        if t_old is not None and t_new is not None and t_old >= 1.5 * t_new:
+            problems.append(
+                f"{key}: winner def[{o['winner']}] -> def[{n['winner']}] "
+                f"({t_old:.0f}us vs {t_new:.0f}us, >=1.5x margin)")
+        else:
+            print(f"bench-diff: {key}: winner flipped "
+                  f"def[{o['winner']}] -> def[{n['winner']}] within noise "
+                  "margin; not failing", file=sys.stderr)
+    return problems
+
+
 def _cmd_bench(args) -> int:
     """Warm bench-selection winners for every host-runnable target and emit a
     JSON report of winners per (target, primitive, hardware key)."""
@@ -119,8 +163,30 @@ def _cmd_bench(args) -> int:
                          if "bench" in w],
         }
     print(json.dumps(report, indent=1))
-    if args.report:
+    if args.report == "__root__":
+        # commit the bench trajectory: one BENCH_<target>.json per swept
+        # target at the repo root, so selection changes show up in review
+        for name, entry in report["targets"].items():
+            out = _repo_root() / f"BENCH_{name}.json"
+            out.write_text(json.dumps(
+                {"target": name, "smoke": args.smoke, **entry}, indent=1)
+                + "\n")
+            print(f"trajectory: {out}", file=sys.stderr)
+    elif args.report:
         Path(args.report).write_text(json.dumps(report, indent=1))
+    if args.diff:
+        trajectory = json.loads(Path(args.diff).read_text())
+        tgt = trajectory.get("target")
+        if tgt not in report["targets"]:
+            print(f"error: trajectory target {tgt!r} was not swept",
+                  file=sys.stderr)
+            return 2
+        problems = _diff_bench_winners(trajectory, report["targets"][tgt])
+        for p in problems:
+            print(f"bench-diff: REGRESSION {p}", file=sys.stderr)
+        if problems:
+            return 1
+        print(f"bench-diff: winners match {args.diff}", file=sys.stderr)
     return 0
 
 
@@ -210,8 +276,14 @@ def build_parser() -> argparse.ArgumentParser:
     b.add_argument("--targets", action="append", default=[],
                    help="comma-separated host-runnable targets "
                         "(default: every runs_on_host target)")
-    b.add_argument("--report", default=None,
-                   help="also write the JSON winners report to this path")
+    b.add_argument("--report", nargs="?", const="__root__", default=None,
+                   help="write the JSON winners report: with PATH, one "
+                        "combined file there; bare, one BENCH_<target>.json "
+                        "trajectory per target at the repo root (check in)")
+    b.add_argument("--diff", default=None,
+                   help="compare this sweep's winners against a checked-in "
+                        "BENCH_<target>.json trajectory; exit 1 on a clear "
+                        "selection regression")
     b.add_argument("--smoke", action="store_true",
                    help="single-iteration smoke sweep (CI: exercises the "
                         "benchgen path without the measurement cost)")

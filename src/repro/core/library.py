@@ -65,23 +65,65 @@ def artifact_key(config: GenConfig, fingerprint: str,
     )
 
 
+def resolve_store(config: GenConfig, key: CacheKey,
+                  build_root: Path | None = None
+                  ) -> tuple[ArtifactCache, Path]:
+    """The artifact store this run writes to. ``TSL_STORE_ROOT`` (a fleet's
+    one shared directory) or ``config.shared_store`` select the shared
+    multi-process mode, which namespaces artifacts by the key's hardware
+    class; otherwise the classic private ``build/tsl`` root."""
+    import os
+
+    env_root = os.environ.get("TSL_STORE_ROOT")
+    shared = bool(env_root) or config.shared_store
+    root = Path(build_root or config.build_root or env_root
+                or DEFAULT_BUILD_ROOT)
+    if shared:
+        return ArtifactCache(root, shared=True,
+                             namespace=key.hw_namespace()), root
+    return ArtifactCache(root), root
+
+
 def generate_library(config: GenConfig, build_root: Path | None = None,
                      *, force: bool = False,
                      corpus: CorpusIR | None = None
                      ) -> tuple[Path, GenerationResult | None]:
     """Run the target pipeline (or hit the artifact cache) for one target.
 
-    Returns (pkg_dir, result); result is None on a cache hit — no GPO ran."""
-    build_root = Path(build_root or config.build_root or DEFAULT_BUILD_ROOT)
-    store = ArtifactCache(build_root)
+    Returns (pkg_dir, result); result is None on a cache hit — no GPO ran.
+    On a shared store root the GPO run is guarded by writer election: one
+    process generates while every other blocks on ``wait_for`` and returns
+    the published package as a warm hit (zero GPOs re-run)."""
     fingerprint = (corpus.fingerprint if corpus is not None
                    else loader.upd_fingerprint(config.upd_paths))
     key = artifact_key(config, fingerprint, corpus)
+    store, build_root = resolve_store(config, key, build_root)
     pkg = store.package_name(config.package_name, key)
     hit = store.lookup(pkg)
     if hit is not None and not force:
         return hit, None
 
+    if store.shared and not force:
+        while not store.acquire_writer(pkg):
+            hit = store.wait_for(pkg)
+            if hit is not None:
+                return hit, None
+            # writer died unpublished: loop re-runs the election
+        try:
+            hit = store.lookup(pkg)     # published between lookup and lock
+            if hit is not None:
+                return hit, None
+            return _generate_into(config, store, build_root, pkg, key, corpus,
+                                  fingerprint)
+        finally:
+            store.release_writer(pkg)
+    return _generate_into(config, store, build_root, pkg, key, corpus,
+                          fingerprint)
+
+
+def _generate_into(config: GenConfig, store: ArtifactCache, build_root: Path,
+                   pkg: str, key: CacheKey, corpus: CorpusIR | None,
+                   fingerprint: str) -> tuple[Path, GenerationResult]:
     if corpus is None:
         corpus = load_corpus(config.upd_paths, fingerprint=fingerprint)
     run_cfg = dataclasses.replace(config, package_name=pkg,

@@ -268,3 +268,6 @@ class GenConfig:
     bench_smoke: bool = False            # cap bench n_iter at 1 (CI path check)
     upd_paths: tuple[str, ...] = ()      # extra UPD search paths (extensibility studies)
     build_root: str | None = None        # artifact-cache root (None -> build/tsl)
+    shared_store: bool = False           # multi-process store root: lockfile
+                                         # writer election + publish-by-rename
+                                         # (also via TSL_STORE_ROOT env var)

@@ -57,19 +57,26 @@ def _data_entry(mesh):
 
 
 def _entry_size(mesh, entry) -> int:
+    # An axis name the mesh does not carry is a degenerate axis group of
+    # size 1 — the guard then unshards that dim instead of erroring (rules
+    # written for (data, model) must run unchanged on a data-only mesh).
     sizes = _axis_sizes(mesh)
     if entry is None:
         return 1
     if isinstance(entry, tuple):
         total = 1
         for n in entry:
-            total *= sizes[n]
+            total *= sizes.get(n, 1)
         return total
-    return sizes[entry]
+    return sizes.get(entry, 1)
 
 
 def _guard(mesh, shape, entries):
-    """Divisibility guard: unshard any dim the mesh does not divide."""
+    """Divisibility guard: unshard any dim the mesh does not divide.
+
+    Falls back (entry -> None) when the dim does not divide the axis group
+    size AND when the axis group itself is degenerate: size 1, or an axis
+    name the mesh does not have at all."""
     out = []
     for dim, e in zip(shape, entries):
         size = _entry_size(mesh, e)
@@ -77,6 +84,30 @@ def _guard(mesh, shape, entries):
             e = None
         out.append(e)
     return out
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    """Axis-name -> size for a Mesh (or any shape-only stand-in)."""
+    return _axis_sizes(mesh)
+
+
+def dp_size(mesh) -> int:
+    """Folded data-parallel group size (1 on a model-only or empty mesh)."""
+    if mesh is None:
+        return 1
+    return _entry_size(mesh, _data_entry(mesh))
+
+
+def tp_size(mesh) -> int:
+    """Tensor-parallel (``model`` axis) size (1 when the mesh has none)."""
+    if mesh is None:
+        return 1
+    return _axis_sizes(mesh).get("model", 1)
+
+
+def mesh_shards(mesh) -> int:
+    """Total shard count = dp * tp (1 when unmeshed)."""
+    return dp_size(mesh) * tp_size(mesh)
 
 
 # ---------------------------------------------------------------------------
@@ -118,18 +149,27 @@ def param_shardings(mesh, params):
 # ---------------------------------------------------------------------------
 # decode-state rules
 
-def _state_spec_one(mesh, shape) -> P:
+def _state_spec_one(mesh, shape, token_axis="auto", batch_axis=1) -> P:
     if len(shape) < 3:
         return P(*([None] * len(shape)))
     entries = [None] * len(shape)
     sizes = _axis_sizes(mesh)
     model_size = sizes.get("model", 1)
-    batch_i = 1
-    # sequence axis = largest NON-batch dim (a huge decode batch must not
-    # steal the model axis from the sequence dim)
-    seq_i = max((i for i in range(len(shape)) if i != batch_i),
-                key=lambda i: shape[i])
-    if model_size > 1 and shape[seq_i] % model_size == 0 and shape[seq_i] >= model_size:
+    batch_i = batch_axis
+    if token_axis == "auto":
+        # sequence axis = largest NON-batch dim (a huge decode batch must not
+        # steal the model axis from the sequence dim)
+        seq_i = max((i for i in range(len(shape)) if i != batch_i),
+                    key=lambda i: shape[i])
+    else:
+        # family-declared token axis (state_page_axes contract); None marks a
+        # fixed-size recurrent leaf with NO sequence axis — sharding one of
+        # its feature/contraction axes on ``model`` would reassociate the
+        # reductions that consume it and break token-for-token equivalence,
+        # so such leaves stay batch-on-data only.
+        seq_i = token_axis
+    if (seq_i is not None and seq_i != batch_i and model_size > 1
+            and shape[seq_i] % model_size == 0 and shape[seq_i] >= model_size):
         entries[seq_i] = "model"
     data = _data_entry(mesh)
     if data is not None:
@@ -139,13 +179,30 @@ def _state_spec_one(mesh, shape) -> P:
     return P(*entries)
 
 
-def state_specs(mesh, state):
-    """PartitionSpec pytree for a decode-state pytree (KV caches, SSM states)."""
+def state_specs(mesh, state, token_axes=None, batch_axes=None):
+    """PartitionSpec pytree for a decode-state pytree (KV caches, SSM states).
+
+    ``token_axes`` (optional, dict-state only): name -> token-axis int or
+    None, the :func:`state_page_axes` contract each model family declares.
+    When given it overrides the largest-dim heuristic — leaves declared
+    ``None`` (recurrent tails) get no ``model`` entry at all.
+    ``batch_axes`` (optional, dict-state only): name -> request-axis int,
+    the ``state_batch_axes`` contract (defaults to 1 per leaf)."""
+    if token_axes is not None and isinstance(state, dict):
+        batch_axes = batch_axes or {}
+        return {
+            k: _state_spec_one(mesh, tuple(v.shape),
+                               token_axis=token_axes.get(k, "auto"),
+                               batch_axis=batch_axes.get(k, 1))
+            for k, v in state.items()
+        }
     return jax.tree.map(lambda leaf: _state_spec_one(mesh, tuple(leaf.shape)), state)
 
 
-def state_shardings(mesh, state):
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs(mesh, state),
+def state_shardings(mesh, state, token_axes=None, batch_axes=None):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        state_specs(mesh, state, token_axes=token_axes,
+                                    batch_axes=batch_axes),
                         is_leaf=lambda x: isinstance(x, P))
 
 

@@ -87,9 +87,7 @@ def main(argv=None) -> dict:
 
     key = jax.random.PRNGKey(args.seed)
     with mesh:
-        state = init_train_state(model, opt_cfg, key)
-    shardings = sharding.param_shardings(mesh, state["params"])
-    state["params"] = jax.device_put(state["params"], shardings)
+        state = init_train_state(model, opt_cfg, key, mesh=mesh)
 
     data_state = DataState()
     ckpt = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None

@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.tsl_api import ops as tsl
 
@@ -31,10 +32,17 @@ from .mlp import init_mlp, mlp_forward
 
 
 def _sinusoid(s: int, d: int):
-    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
-    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
-    ang = pos / jnp.power(10000.0, 2 * dim / d)
-    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    # Computed on the HOST (numpy) so the table enters the graph as a literal
+    # constant. A traced formulation (iota -> sin/cos -> concatenate) is
+    # miscompiled by XLA CPU's SPMD partitioner when the result feeds any
+    # sharded computation — the partitioned concat-of-iotas reassembles with
+    # the halves misplaced, silently corrupting every encoder activation
+    # (observed under --xla_force_host_platform_device_count; the constant
+    # costs nothing and is immune).
+    pos = np.arange(s, dtype=np.float32)[:, None]
+    dim = np.arange(d // 2, dtype=np.float32)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1))
 
 
 def _init_enc_block(key, cfg, dtype):

@@ -54,7 +54,9 @@ from dataclasses import asdict, dataclass
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
 
+from repro.dist import sharding as dist_sharding
 from repro.nn.model import build_model
 
 from .paging import PagedConfig, PagedKVStore, prefix_key, selected_page_size
@@ -63,6 +65,16 @@ from .scheduler import (BucketPolicy, CostModelAdmission, PagedAdmission,
 from .slots import PagesExhausted, assert_span_fits, validate_donor
 from .spec import (SpeculationConfig, SpeculationPolicy, accept_span,
                    build_drafter, upd_verify_defaults)
+
+# Sharding-invariant RNG: the legacy threefry lowering draws DIFFERENT bits
+# when its operand arrives sharded, so a sampled run on a mesh would diverge
+# from the 1-device engine at the first categorical draw. The partitionable
+# lowering is counter-based per element — same key, same draws, any layout —
+# which is what makes the mesh equivalence guarantee hold for sampled
+# requests too. Set once at import so meshed and unmeshed engines in one
+# process share a single stream (the flag changes sampled streams vs older
+# releases; tests only compare within-process).
+jax.config.update("jax_threefry_partitionable", True)
 
 
 @dataclass(frozen=True)
@@ -108,7 +120,8 @@ class ServeEngine:
                  prefill_chunk: int | None = None,
                  buckets: tuple[int, ...] | None = None,
                  speculation: SpeculationConfig | None = None,
-                 paged: PagedConfig | None = None):
+                 paged: PagedConfig | None = None,
+                 mesh=None):
         if cfg.family == "audio" and enc_len is None:
             raise ValueError("audio family: pass enc_len (the fixed encoder "
                              "length every request's frames are sized to)")
@@ -119,6 +132,18 @@ class ServeEngine:
         self.sampling = sampling or SamplingConfig()
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed))
+        # -- mesh-sharded serving (repro.dist rules over a jax mesh) ---------
+        # params shard row/col-TP with the output-projection flip; slot-table
+        # and page-pool state shard batch-on-data / sequence-on-model. Every
+        # jitted step pins its returned state to those SAME rules
+        # (with_sharding_constraint), so inputs and outputs agree and
+        # steady-state steps run with zero resharding — asserted by the
+        # ``reshard_events`` counter the report carries.
+        self.mesh = mesh
+        self._reshard_events = 0
+        if mesh is not None:
+            self.params = jax.device_put(
+                self.params, dist_sharding.param_shardings(mesh, self.params))
         # the slot cache is filled to prompt_len + decode_prefix (vlm vision
         # rows), and decode must write AFTER it
         self._prefix = cfg.decode_prefix
@@ -153,6 +178,23 @@ class ServeEngine:
             self._k_max = speculation.k_max if speculation.k_max is not None \
                 else upd_verify_defaults()["k_max"]
         self._state_len = max_len + self._k_max
+        # family-declared per-leaf axis contracts drive the state sharding
+        # rules: state_page_axes names the TRUE token axis of each leaf (None
+        # = fixed-size recurrent tail — sharding one of its feature axes on
+        # ``model`` would reassociate the reductions that consume it and
+        # break token-for-token equivalence), state_batch_axes the request
+        # axis. Families without the contracts fall back to the shape
+        # heuristic in dist.sharding.
+        self._state_token_axes = None
+        self._state_batch_axes = None
+        if mesh is not None and self.model.state_page_axes is not None:
+            shapes = jax.eval_shape(
+                lambda: self.model.init_decode_state(
+                    1, self._state_len, enc_len=self.enc_len))
+            if isinstance(shapes, dict):
+                self._state_token_axes = self.model.state_page_axes(shapes)
+                if self.model.state_batch_axes is not None:
+                    self._state_batch_axes = self.model.state_batch_axes(shapes)
         # -- paged slot memory (block-table residency under the lanes) -------
         self.paged = paged
         self._store: PagedKVStore | None = None
@@ -208,6 +250,21 @@ class ServeEngine:
         self._table_width = 0
         if self._fused:
             self._table_width = -(-self._state_len // self._store.page)
+        # page pools shard like the slot state they mirror: the token axis
+        # was split into (n_pages, page), so the PAGE axis takes the model
+        # entry the sequence dim would have (divisibility-guarded), and the
+        # engine re-pins after any host-path pool mutation so fused steps
+        # always see the same input shardings they compiled against
+        self._pool_shardings: dict | None = None
+        if mesh is not None and self._store is not None:
+            self._pool_shardings = self._pool_sharding_rules()
+            for n in self._store.pools:
+                self._store.pools[n] = jax.device_put(
+                    self._store.pools[n], self._pool_shardings[n])
+            for n in self._store.scale_pools:
+                key = f"{n}__scale"
+                self._store.scale_pools[n] = jax.device_put(
+                    self._store.scale_pools[n], self._pool_shardings[key])
         # fused-path counters for report["paged"]
         self._lane_activations = 0      # full page->lane gathers (fallback)
         self._tail_restores = 0         # fused activations (tails only)
@@ -218,35 +275,81 @@ class ServeEngine:
             self.cost_model = PagedAdmission(cfg, batch, max_len,
                                              budget=self._store,
                                              enc_len=enc_len,
-                                             policy=self.policy)
+                                             policy=self.policy, mesh=mesh)
         else:
             self.cost_model = CostModelAdmission(cfg, batch, max_len,
                                                  enc_len=enc_len,
-                                                 policy=self.policy)
+                                                 policy=self.policy,
+                                                 mesh=mesh)
         # -- speculative decoding (draft/verify over the slot table) ---------
         self._drafter = None
         self._spec_policy = None
         self._verify = None
         self._commit = None
+
+        # jit wrappers: on a mesh, every compiled step pins its returned
+        # state (and pools) to the dist.sharding rules — inputs already
+        # carry them, so outputs match inputs and the donated buffers are
+        # reused without a single resharding copy in steady state
+        def _ls(fn):
+            """(logits, state)-returning step."""
+            if mesh is None:
+                return fn
+
+            def wrapped(params, state, *args):
+                logits, st = fn(params, state, *args)
+                return logits, self._pin_state(st)
+            return wrapped
+
+        def _st(fn):
+            """state-returning step (insert/reset/commit)."""
+            if mesh is None:
+                return fn
+
+            def wrapped(*args):
+                return self._pin_state(fn(*args))
+            return wrapped
+
+        def _lsp(fn):
+            """(logits, state, pools)-returning fused paged step."""
+            if mesh is None:
+                return fn
+
+            def wrapped(params, state, pools, *args):
+                logits, st, pl = fn(params, state, pools, *args)
+                return logits, self._pin_state(st), self._pin_pools(pl)
+            return wrapped
+
+        def _sp(fn):
+            """(state, pools)-returning fused paged commit."""
+            if mesh is None:
+                return fn
+
+            def wrapped(params, state, pools, *args):
+                st, pl = fn(params, state, pools, *args)
+                return self._pin_state(st), self._pin_pools(pl)
+            return wrapped
+
         if speculation is not None:
             self._drafter = build_drafter(speculation, cfg, batch=batch,
                                           state_len=self._state_len,
                                           seed=seed + 2)
             pricing = self.cost_model or CostModelAdmission(
-                cfg, batch, max_len, enc_len=enc_len, policy=self.policy)
+                cfg, batch, max_len, enc_len=enc_len, policy=self.policy,
+                mesh=mesh)
             if self.cost_model is not None:
                 self.cost_model.spec_k = self._k_max
             self._spec_policy = SpeculationPolicy(
                 batch, self._k_max, pricing, speculation,
                 drafter_cost_s=self._drafter.cost_per_token_s())
-            self._verify = jax.jit(self.model.verify_step,
+            self._verify = jax.jit(_ls(self.model.verify_step),
                                    donate_argnums=(1,))
             if self.model.verify_commit is not None:
-                self._commit = jax.jit(self.model.verify_commit,
+                self._commit = jax.jit(_st(self.model.verify_commit),
                                        donate_argnums=(1,))
         # donate the incoming state: it is dead after every call, and without
         # donation each step/insert/reset copies the full multi-layer cache
-        self._decode = jax.jit(self.model.decode_step, donate_argnums=(1,))
+        self._decode = jax.jit(_ls(self.model.decode_step), donate_argnums=(1,))
         # fused paged steps: the tail state AND the pool dict are donated —
         # the pools are updated in place on device and re-adopted by the
         # store after every call (set_device_pools)
@@ -254,16 +357,17 @@ class ServeEngine:
         self._verify_paged = None
         self._commit_paged = None
         if self._fused:
-            self._decode_paged = jax.jit(self.model.decode_step_paged,
+            self._decode_paged = jax.jit(_lsp(self.model.decode_step_paged),
                                          donate_argnums=(1, 2))
             if speculation is not None:
-                self._verify_paged = jax.jit(self.model.verify_step_paged,
+                self._verify_paged = jax.jit(_lsp(self.model.verify_step_paged),
                                              donate_argnums=(1, 2))
                 if self.model.verify_commit_paged is not None:
                     self._commit_paged = jax.jit(
-                        self.model.verify_commit_paged, donate_argnums=(1, 2))
-        self._insert = jax.jit(self.model.insert_slot, donate_argnums=(0,))
-        self._reset = jax.jit(self.model.reset_slot, donate_argnums=(0,))
+                        _sp(self.model.verify_commit_paged),
+                        donate_argnums=(1, 2))
+        self._insert = jax.jit(_st(self.model.insert_slot), donate_argnums=(0,))
+        self._reset = jax.jit(_st(self.model.reset_slot), donate_argnums=(0,))
         self._chunk = jax.jit(self._chunk_fn, donate_argnums=(1,))
         self._sample = self._build_sampler()
         self._key = jax.random.PRNGKey(seed + 1)
@@ -319,6 +423,89 @@ class ServeEngine:
         self._key, sub = jax.random.split(self._key)
         return sub
 
+    # -- mesh helpers ---------------------------------------------------------
+
+    def _state_shardings(self, state):
+        """Rule shardings for a slot-table state pytree, steered by the
+        family's declared token/batch axis contracts when available."""
+        return dist_sharding.state_shardings(
+            self.mesh, state, token_axes=self._state_token_axes,
+            batch_axes=self._state_batch_axes)
+
+    def _pin_state(self, state):
+        """Constrain every state leaf to its ``dist.sharding`` rule — used
+        INSIDE the jitted steps so compiled outputs carry exactly the
+        shardings the inputs arrived with (the zero-resharding invariant).
+        Identity off-mesh."""
+        if self.mesh is None:
+            return state
+        shards = self._state_shardings(state)
+        return jax.tree.map(jax.lax.with_sharding_constraint, state, shards)
+
+    def _pin_pools(self, pools: dict) -> dict:
+        if self._pool_shardings is None:
+            return pools
+        return {n: jax.lax.with_sharding_constraint(a, self._pool_shardings[n])
+                for n, a in pools.items()}
+
+    def _pool_sharding_rules(self) -> dict:
+        """NamedSharding per pool leaf (scale pools as ``{leaf}__scale``):
+        the page axis — the split token axis — takes the ``model`` entry the
+        sequence dim carries in the slot table, divisibility-guarded."""
+        st = self._store
+        tp = dist_sharding.tp_size(self.mesh)
+        out = {}
+        for name, (ax, row_shape, _dt) in st.paged.items():
+            page_axis = ax if st.fused else 0
+            ndim = len(row_shape) + (2 if st.fused else 1)
+            n_along = st.n_pages if st.fused else st.n_pages * st.page
+            entries = [None] * ndim
+            if tp > 1 and n_along % tp == 0 and n_along >= tp:
+                entries[page_axis] = "model"
+            spec = PartitionSpec(*entries)
+            out[name] = NamedSharding(self.mesh, spec)
+            if name in st.scale_pools:
+                out[f"{name}__scale"] = NamedSharding(self.mesh, spec)
+        return out
+
+    def _sharded_device_pools(self) -> dict:
+        """Device pools re-pinned to their rule shardings: host-path writes
+        (prefill commit, CoW, spill/rehydrate) run eagerly and may leave a
+        pool differently laid out; a no-op when shardings already match, so
+        the steady-state decode path never copies."""
+        pools = self._store.device_pools()
+        if self._pool_shardings is None:
+            return pools
+        return {n: a if a.sharding == self._pool_shardings[n]
+                else jax.device_put(a, self._pool_shardings[n])
+                for n, a in pools.items()}
+
+    def _new_donor(self):
+        """Fresh batch-1 donor, mesh-placed: created with the SAME rule
+        shardings the chunk jit's donated output carries, so every chunk
+        call compiles once and reuses the donor buffers."""
+        donor = self.model.init_decode_state(1, self._state_len,
+                                             enc_len=self.enc_len)
+        if self.mesh is not None:
+            donor = jax.device_put(donor, self._state_shardings(donor))
+        return donor
+
+    def _check_steady_sharding(self, state, pools: dict | None = None):
+        """Post-step audit (mesh mode): every state/pool leaf must still
+        carry its rule sharding. Any drift is a resharding event — the
+        counter lands in report["mesh"]["reshard_events"] and tests assert
+        it stays 0."""
+        if self.mesh is None:
+            return
+        expected = self._state_shardings(state)
+        leaves = list(zip(jax.tree.leaves(state), jax.tree.leaves(expected)))
+        if pools is not None and self._pool_shardings is not None:
+            leaves += [(a, self._pool_shardings[n])
+                       for n, a in pools.items()]
+        for got, want in leaves:
+            if not got.sharding.is_equivalent_to(want, got.ndim):
+                self._reshard_events += 1
+
     def _init_state(self):
         # _state_len = max_len + k_max: verify-span slab headroom (see
         # __init__) — admission and the overrun guards still cap real fill
@@ -331,6 +518,8 @@ class ServeEngine:
             # decode/verify reads them through the block table
             state = {n: state[n] for n, ax in self._page_axes.items()
                      if ax is None}
+        if self.mesh is not None:
+            state = jax.device_put(state, self._state_shardings(state))
         return state
 
     def _donor_tails(self, donor: dict) -> dict:
@@ -430,8 +619,7 @@ class ServeEngine:
             padded[0, :req.prompt_len] = np.asarray(req.tokens, np.int64)
             task = _PrefillTask(
                 req=req, slot=-1, padded=padded, n_chunks=bucket // chunk,
-                donor=self.model.init_decode_state(
-                    1, self._state_len, enc_len=self.enc_len),
+                donor=self._new_donor(),
                 share_key=share_key, share_rows=share_rows)
             if shared:
                 # prefix hit: seed the donor from the shared pages (+ the
@@ -468,9 +656,7 @@ class ServeEngine:
                 self._gather_bytes_eliminated += \
                     self._store.requests[rid].fill * self._store.fp_row_bytes
             else:
-                donor = self.model.init_decode_state(1, self._state_len,
-                                                     enc_len=self.enc_len)
-                donor = self._store.load_donor(rid, donor)
+                donor = self._store.load_donor(rid, self._new_donor())
                 self._lane_activations += 1
             validate_donor(state, donor, self.model.state_batch_axes(state))
             state = self._insert(state, donor, slot)
@@ -752,8 +938,7 @@ class ServeEngine:
                     tasks.append(_PrefillTask(
                         req=req, slot=free[0], padded=padded,
                         n_chunks=bucket // chunk,
-                        donor=self.model.init_decode_state(
-                            1, self._state_len, enc_len=self.enc_len)))
+                        donor=self._new_donor()))
                     sched.reserve(free[0], req, step)
 
             # -- unified step, phase 1: one chunk per in-flight prefill ------
@@ -839,7 +1024,7 @@ class ServeEngine:
                     # steady-state fused path: this step reads/writes the
                     # pools THROUGH the block table — no page->lane gather
                     tables = self._build_tables(sched, active)
-                    pools = self._store.device_pools()
+                    pools = self._sharded_device_pools()
                 if K == 0:
                     # degraded path: EXACTLY today's decode step — same jitted
                     # fn, same sampler call, same key draw — so k=0
@@ -930,6 +1115,12 @@ class ServeEngine:
                             self._drafter.on_commit(slot, m)
                         generated += len(emit)
                         emitted_this_step += len(emit)
+
+            if active and self.mesh is not None:
+                # steady-state audit: the step must have returned state (and
+                # pools) in exactly the rule shardings it received them with
+                self._check_steady_sharding(
+                    state, self._store.device_pools() if self._fused else None)
 
             # -- phase 3: shared-step time attribution (prefill vs decode) ---
             decode_emitted += emitted_this_step
@@ -1049,6 +1240,32 @@ class ServeEngine:
                         for r in sched.refused],
             "outputs": outputs,
         }
+        if self.mesh is not None:
+            shards = dist_sharding.mesh_shards(self.mesh)
+            param_bytes = sum(x.nbytes for x in jax.tree.leaves(self.params))
+            state_bytes = sum(x.nbytes for x in jax.tree.leaves(state))
+            pool_bytes = 0
+            if self._store is not None:
+                pool_bytes = self._store.hbm_bytes_resident()
+            report["mesh"] = {
+                "axes": dist_sharding.mesh_axis_sizes(self.mesh),
+                "shards": shards,
+                "dp": dist_sharding.dp_size(self.mesh),
+                "tp": dist_sharding.tp_size(self.mesh),
+                # the compiled-once / zero-resharding claim, audited per step
+                "reshard_events": self._reshard_events,
+                "param_bytes_per_shard": param_bytes / shards,
+                "state_bytes_per_shard": state_bytes / shards,
+                "hbm_resident_bytes_per_shard":
+                    (param_bytes + state_bytes + pool_bytes) / shards,
+                "comms_bytes_per_step":
+                    self.cost_model.comms_bytes_per_step()
+                    if self.cost_model is not None else 0.0,
+            }
+            if self.cost_model is not None:
+                info = self.cost_model.mesh_info()
+                if info is not None:
+                    report["mesh"]["pricing"] = info
         if self.cost_model is not None:
             report["cost_model"] = {
                 "decode_bytes_per_step": self.cost_model.decode_bytes_per_step(),

@@ -36,9 +36,26 @@ import logging
 from collections import deque
 from dataclasses import dataclass
 
-from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
 
 log = logging.getLogger(__name__)
+
+
+def _mesh_dp_tp(mesh) -> tuple[int, int]:
+    """(data-parallel, tensor-parallel) sizes of a mesh — shape-only
+    introspection (``axis_names`` + device-array shape), so it works on
+    ``jax.sharding.Mesh`` AND the shape-only fakes tests use, and keeps
+    this module jax-free."""
+    if mesh is None:
+        return 1, 1
+    import numpy as np
+    sizes = dict(zip(tuple(mesh.axis_names), tuple(np.shape(mesh.devices))))
+    tp = max(1, sizes.get("model", 1))
+    dp = 1
+    for name, size in sizes.items():
+        if name != "model":
+            dp *= max(1, size)
+    return dp, tp
 
 # (primitive, term) pairs already warned about — the analytic fallback fires
 # once per step otherwise and would flood the serving logs
@@ -48,10 +65,22 @@ _warned_cost_terms: set[tuple[str, str]] = set()
 def _cost_fallback_warn(primitive: str, term: str) -> None:
     """A generated package missing a priced cost term is a corpus defect
     (TSL-Check flags it statically as TSL014); warn ONCE per (primitive,
-    term) so the silent analytic fallback is attributable in logs."""
+    term) so the silent analytic fallback is attributable in logs. The
+    ``comms`` term gets its own wording: it prices MESH collective traffic,
+    so a gap there mis-prices sharded serving specifically — distinct from a
+    missing ``flops``/``bytes`` term, which mis-prices single-device
+    roofline admission."""
     key = (primitive, term)
-    if key not in _warned_cost_terms:
-        _warned_cost_terms.add(key)
+    if key in _warned_cost_terms:
+        return
+    _warned_cost_terms.add(key)
+    if term == "comms":
+        log.warning(
+            "TSL014: generated library has no 'comms' cost term on %r — "
+            "mesh-sharded admission prices per-step collective bytes from "
+            "the analytic ring model instead (run `python -m repro.core "
+            "analyze` to lint the UPD cost channel)", primitive)
+    else:
         log.warning(
             "TSL014: generated library has no cost term %r/%r — admission "
             "falls back to the analytic formula (run `python -m repro.core "
@@ -228,7 +257,8 @@ class CostModelAdmission:
 
     def __init__(self, cfg, batch: int, max_len: int,
                  enc_len: int | None = None,
-                 policy: BucketPolicy | None = None):
+                 policy: BucketPolicy | None = None,
+                 mesh=None):
         self.cfg = cfg
         self.batch = batch
         self.max_len = max_len
@@ -239,6 +269,13 @@ class CostModelAdmission:
             active_only=(cfg.family == "moe")) * self._dtype_bytes()
         self._attn_layers = self._n_attn_layers()
         self._step_s = None         # computed lazily, cached (pure shapes)
+        # mesh-aware pricing: params and slot state are sharded over every
+        # device (dist.sharding rules), so HBM traffic divides by the total
+        # shard count, while the TP axis adds per-layer collective bytes
+        # priced by the UPD ``comms`` term against the interconnect roofline
+        self.mesh = mesh
+        self.dp, self.tp = _mesh_dp_tp(mesh)
+        self.shards = self.dp * self.tp
         # speculative decoding: the engine sets spec_k > 0 when a drafter is
         # attached; admission then prices decode at the BEST-CASE emitted
         # tokens per second across plain decode and a fully-accepted verify
@@ -296,11 +333,62 @@ class CostModelAdmission:
                 attn = self._attn_layers * per_layer(s_eff)
         return self.param_bytes + attn
 
+    def _comms_term(self, primitive: str, fallback: float, **shapes) -> float:
+        """One layer's collective bytes from the UPD ``comms`` term (TSL014
+        analytic-ring fallback when the generated package lacks it).
+        ``comms`` formulas follow the same bf16 wire convention as ``bytes``;
+        rescale to the serving dtype."""
+        shapes = dict(shapes, TP=self.tp)
+        try:
+            from repro.tsl_api import cost
+            raw = cost(primitive, "comms", **shapes)
+        except KeyError:
+            _cost_fallback_warn(primitive, "comms")
+            raw = fallback * (self.tp - 1) / self.tp
+        return raw * (self._dtype_bytes() / 2.0)
+
+    def comms_bytes_per_step(self, s: int | None = None) -> float:
+        """Collective bytes ONE decode step moves over the TP axis: a ring
+        all-reduce of each layer's output activations, priced by the new
+        ``comms`` UPD cost term per layer family (attention_decode /
+        ssd_scan / wkv6_scan). Zero off-mesh and on a TP=1 mesh — the
+        (TP-1)/TP ring factor vanishes."""
+        if self.tp <= 1:
+            return 0.0
+        cfg = self.cfg
+        s_eff = self.max_len if s is None else s
+        b, h, d = self.batch, cfg.n_heads, cfg.hd
+        total = 0.0
+        if self._attn_layers:
+            attn = self._comms_term(
+                "attention_decode", 4.0 * b * h * d,
+                B=b, H=h, KH=cfg.n_kv_heads, S=s_eff, D=d)
+            factor = cfg.n_layers * 2 if cfg.family == "audio" \
+                else self._attn_layers
+            total += factor * attn
+        if cfg.family == "ssm":
+            kk = cfg.rwkv_head_dim
+            hh = cfg.d_model // max(kk, 1)
+            total += cfg.n_layers * self._comms_term(
+                "wkv6_scan", 4.0 * b * hh * kk,
+                B=b, T=1, H=hh, K=kk, V=kk)
+        elif cfg.family == "hybrid":
+            p = cfg.ssm_head_dim
+            hh = (cfg.d_inner_mult * cfg.d_model) // max(p, 1)
+            scan_layers = cfg.n_layers - self._attn_layers
+            total += scan_layers * self._comms_term(
+                "ssd_scan", 4.0 * b * hh * p,
+                B=b, T=1, H=hh, P=p, N=cfg.ssm_state)
+        return total
+
     def step_seconds(self, s: int | None = None) -> float:
         if s is not None:
-            return self.decode_bytes_per_step(s) / HBM_BW
+            return (self.decode_bytes_per_step(s) / (self.shards * HBM_BW)
+                    + self.comms_bytes_per_step(s) / ICI_BW)
         if self._step_s is None:
-            self._step_s = self.decode_bytes_per_step() / HBM_BW
+            self._step_s = (
+                self.decode_bytes_per_step() / (self.shards * HBM_BW)
+                + self.comms_bytes_per_step() / ICI_BW)
         return self._step_s
 
     def verify_seconds(self, k: int, s: int | None = None) -> float:
@@ -337,7 +425,17 @@ class CostModelAdmission:
             else:
                 attn = self._attn_layers * per_layer(s_eff)
         commit_factor = 2.0 if cfg.family in ("ssm", "hybrid") else 1.0
-        return (self.param_bytes + attn) / HBM_BW * commit_factor
+        comms_s = 0.0
+        if self.tp > 1 and self._attn_layers:
+            comms = self._comms_term(
+                "attention_verify", 4.0 * self.batch * cfg.n_heads * sv * cfg.hd,
+                B=self.batch, H=cfg.n_heads, KH=cfg.n_kv_heads,
+                SV=sv, S=s_eff, D=cfg.hd)
+            factor = cfg.n_layers * 2 if cfg.family == "audio" \
+                else self._attn_layers
+            comms_s = factor * comms / ICI_BW
+        return ((self.param_bytes + attn) / (self.shards * HBM_BW)
+                + comms_s) * commit_factor
 
     def emit_seconds_per_token(self, s: int | None = None) -> float:
         """Best-case seconds per EMITTED token: plain decode, or — when the
@@ -373,7 +471,31 @@ class CostModelAdmission:
                         * shapes["D"]
 
             flops += self._attn_layers * sum(chunk_flops(f) for f in fills)
-        return flops / PEAK_FLOPS
+        seconds = flops / (self.shards * PEAK_FLOPS)
+        if self.tp > 1 and self._attn_layers:
+            chunk = self.policy.chunk if self.policy else padded_len
+            n_chunks = padded_len // chunk if chunk else 0
+            comms = self._comms_term(
+                "attention_prefill_chunk",
+                4.0 * chunk * cfg.n_heads * cfg.hd,
+                B=1, H=cfg.n_heads, KH=cfg.n_kv_heads, C=chunk,
+                S=self.prefix + padded_len, D=cfg.hd)
+            seconds += self._attn_layers * n_chunks * comms / ICI_BW
+        return seconds
+
+    def mesh_info(self) -> dict | None:
+        """Mesh pricing summary for the engine report (None off-mesh):
+        axis sizes, the per-shard parameter bytes the roofline divides to,
+        and the UPD-priced collective bytes per full-table decode step."""
+        if self.mesh is None:
+            return None
+        return {
+            "axes": {"data": self.dp, "model": self.tp},
+            "shards": self.shards,
+            "param_bytes_per_shard": self.param_bytes / self.shards,
+            "comms_bytes_per_step": self.comms_bytes_per_step(),
+            "step_seconds": self.step_seconds(),
+        }
 
     def admit(self, req: Request, now_s: float) -> tuple[bool, str]:
         if self.policy is not None:
@@ -434,9 +556,26 @@ class PagedAdmission(CostModelAdmission):
 
     def __init__(self, cfg, batch: int, max_len: int, *, budget,
                  enc_len: int | None = None,
-                 policy: BucketPolicy | None = None):
-        super().__init__(cfg, batch, max_len, enc_len=enc_len, policy=policy)
+                 policy: BucketPolicy | None = None,
+                 mesh=None):
+        super().__init__(cfg, batch, max_len, enc_len=enc_len, policy=policy,
+                         mesh=mesh)
         self.budget = budget
+
+    def mesh_info(self) -> dict | None:
+        """Page budgets divide by the shard count too: every pool leaf is
+        itself sharded over the mesh, so one LOGICAL page costs
+         1/shards of its bytes on each device — reported per shard so
+        operators see the budget each device actually holds."""
+        info = super().mesh_info()
+        if info is None:
+            return None
+        n_pages = getattr(self.budget, "n_pages", None)
+        page_bytes = getattr(self.budget, "page_bytes", None)
+        if n_pages is not None and page_bytes is not None:
+            info["page_budget_bytes_per_shard"] = \
+                n_pages * page_bytes / self.shards
+        return info
 
     def admit(self, req: Request, now_s: float) -> tuple[bool, str]:
         if req.resume_token is not None:

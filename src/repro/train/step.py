@@ -50,6 +50,18 @@ def make_train_step(model: Model, opt_cfg: OptConfig, *,
         metrics = jax.tree.map(lambda m: m[-1], metrics)
         return loss_sum / microbatches, metrics, grads
 
+    def _pin_like_params(tree):
+        """Constrain a params-shaped pytree (params, grads, float moments)
+        to the ``dist.sharding`` parameter rules so compiled outputs carry
+        the SAME shardings the inputs arrived with — step N+1 then consumes
+        step N's donated buffers with zero resharding. Identity off-mesh."""
+        if mesh is None:
+            return tree
+        from repro.dist import sharding as dist_sharding
+
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                            dist_sharding.param_shardings(mesh, tree))
+
     def train_step(train_state, batch):
         params, opt_state = train_state["params"], train_state["opt"]
         loss, metrics, grads = compute_grads(params, batch)
@@ -59,12 +71,32 @@ def make_train_step(model: Model, opt_cfg: OptConfig, *,
             metrics = {**metrics, "compress_err": cerr}
         new_params, new_opt, opt_metrics = opt_mod.apply_updates(
             opt_cfg, params, grads, opt_state)
+        new_params = _pin_like_params(new_params)
+        if mesh is not None and opt_cfg.moment_dtype != "int8":
+            # float moments mirror the parameter tree leaf-for-leaf; int8
+            # moments are (q, scale) pairs with their own treedef — those
+            # stay wherever the update computed them
+            new_opt = {**new_opt, "m": _pin_like_params(new_opt["m"]),
+                       "v": _pin_like_params(new_opt["v"])}
         return ({"params": new_params, "opt": new_opt},
                 {"loss": loss, **metrics, **opt_metrics})
 
     return train_step
 
 
-def init_train_state(model: Model, opt_cfg: OptConfig, key):
+def init_train_state(model: Model, opt_cfg: OptConfig, key, *, mesh=None):
+    """Fresh {params, opt} state; with ``mesh`` the params AND the float
+    optimizer moments are placed by the ``dist.sharding`` parameter rules
+    (row/col TP + output-projection flip), matching what the mesh-aware
+    train step pins — so the very first step already runs reshard-free."""
     params = model.init(key)
-    return {"params": params, "opt": opt_mod.init_opt_state(opt_cfg, params)}
+    opt = opt_mod.init_opt_state(opt_cfg, params)
+    if mesh is not None:
+        from repro.dist import sharding as dist_sharding
+
+        shardings = dist_sharding.param_shardings(mesh, params)
+        params = jax.device_put(params, shardings)
+        if opt_cfg.moment_dtype != "int8":
+            opt = {**opt, "m": jax.device_put(opt["m"], shardings),
+                   "v": jax.device_put(opt["v"], shardings)}
+    return {"params": params, "opt": opt}

@@ -149,11 +149,11 @@ def test_priced_primitive_gap_and_fix():
                   cost_shapes=("B",))
     rep = check_cost_channel(mk_corpus([bad]))
     assert "TSL014" in rep.codes()
-    assert any("bytes" in f.message for f in rep.findings
-               if f.code == "TSL014")
+    assert any("bytes" in f.message and "comms" in f.message
+               for f in rep.findings if f.code == "TSL014")
 
     good = mk_prim("attention_decode",
-                   [mk_impl(cost={"flops": "B", "bytes": "B"})],
+                   [mk_impl(cost={"flops": "B", "bytes": "B", "comms": "B"})],
                    cost_shapes=("B",))
     assert "TSL014" not in check_cost_channel(mk_corpus([good])).codes()
 
@@ -163,7 +163,7 @@ def test_priced_primitive_bench_requires_every_candidate_priced():
     # unpriced candidate breaks the static guarantee even if the heuristic
     # winner is priced
     full = mk_impl(flags=("xla", "fast"),
-                   cost={"flops": "B", "bytes": "B"})
+                   cost={"flops": "B", "bytes": "B", "comms": "B"})
     bare = mk_impl(flags=("xla",))
     prim = mk_prim("ssd_scan", [full, bare], cost_shapes=("B",),
                    bench={"setup": "x = 1", "n_iter": 1})
@@ -445,3 +445,38 @@ def test_scheduler_cost_fallback_warns_once_with_tsl014(monkeypatch, caplog):
     assert len(msgs) == 1
     assert "attention_decode" in msgs[0] and "bytes" in msgs[0]
     assert "repro.core analyze" in msgs[0]
+
+
+def test_scheduler_comms_fallback_warning_is_distinct(monkeypatch, caplog):
+    """Satellite: a missing ``comms`` term warns with its OWN wording — it
+    mis-prices mesh collective traffic, not the single-device roofline —
+    and still dedups per (primitive, term)."""
+    import repro.tsl_api as tsl_api
+    from repro.configs import get_config
+    from repro.serve import scheduler as sched
+
+    def missing_term(*a, **k):
+        raise KeyError("attention_decode")
+
+    monkeypatch.setattr(tsl_api, "cost", missing_term)
+    monkeypatch.setattr(sched, "_warned_cost_terms", set())
+
+    class _FakeMesh:
+        axis_names = ("data", "model")
+        import numpy as _np
+        devices = _np.empty((2, 4), dtype=object)
+
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    adm = sched.CostModelAdmission(cfg, batch=2, max_len=32, mesh=_FakeMesh())
+    with caplog.at_level(logging.WARNING, logger="repro.serve.scheduler"):
+        adm.comms_bytes_per_step()
+        adm.comms_bytes_per_step(16)        # dedup: one warning only
+    msgs = [r.getMessage() for r in caplog.records
+            if "TSL014" in r.getMessage()]
+    comms_msgs = [m for m in msgs if "'comms'" in m]
+    assert len(comms_msgs) == 1
+    assert "attention_decode" in comms_msgs[0]
+    assert "collective" in comms_msgs[0]     # names the mesh consequence
+    assert "repro.core analyze" in comms_msgs[0]
+    # and the wording differs from the flops/bytes fallback message
+    assert "roofline" not in comms_msgs[0]

@@ -342,3 +342,189 @@ def test_cli_bench_rejects_bad_targets(tmp_path, capsys):
     assert main(["bench", "--targets", "pallas_tpu",   # not host-runnable
                  "--build-root", str(tmp_path / "cache")]) == 2
     capsys.readouterr()
+
+
+def test_bench_diff_winner_logic():
+    """Trajectory diffing: surface changes always fail; a winner flip fails
+    only when the FRESH measurement shows a clear (>=1.5x) margin, so
+    near-tie candidates can't flake CI."""
+    from repro.core.cli import _diff_bench_winners
+
+    def entry(winner, cands, times):
+        return {"winner": winner, "candidates": cands, "times_us": times,
+                "n_iter": 3}
+
+    old = {"winners": {"p/float32": entry(0, [0, 5], [100.0, 200.0])}}
+
+    # identical winners: clean
+    assert _diff_bench_winners(old, old) == []
+    # flip with clear margin in the fresh run: regression
+    fresh = {"winners": {"p/float32": entry(5, [0, 5], [400.0, 100.0])}}
+    (p,) = _diff_bench_winners(old, fresh)
+    assert "def[0] -> def[5]" in p and "1.5x" in p
+    # flip within noise: reported but NOT a failure
+    close = {"winners": {"p/float32": entry(5, [0, 5], [110.0, 100.0])}}
+    assert _diff_bench_winners(old, close) == []
+    # candidate-set change: always a failure (corpus moved under trajectory)
+    cset = {"winners": {"p/float32": entry(0, [0, 5, 9], [1.0, 2.0, 3.0])}}
+    assert any("candidate set changed" in p
+               for p in _diff_bench_winners(old, cset))
+    # benched-surface change in either direction: failure
+    assert any("not benched now" in p
+               for p in _diff_bench_winners(old, {"winners": {}}))
+    assert any("newly benched" in p
+               for p in _diff_bench_winners({"winners": {}}, old))
+
+
+def test_cli_bench_trajectory_roundtrip(tmp_path, capsys, monkeypatch):
+    """`bench --report` (bare) writes BENCH_<target>.json at the repo root;
+    `bench --diff` against that trajectory passes on an unchanged corpus."""
+    import json
+
+    from repro.core import cli
+
+    monkeypatch.setattr(cli, "_repo_root", lambda: tmp_path)
+    root = str(tmp_path / "cache")
+    assert cli.main(["bench", "--smoke", "--targets", "cpu_xla",
+                     "--build-root", root, "--report"]) == 0
+    traj = tmp_path / "BENCH_cpu_xla.json"
+    assert traj.exists()
+    data = json.loads(traj.read_text())
+    assert data["target"] == "cpu_xla" and data["winners"]
+    capsys.readouterr()
+    assert cli.main(["bench", "--smoke", "--targets", "cpu_xla",
+                     "--build-root", root, "--diff", str(traj)]) == 0
+    # trajectory for a target that wasn't swept: usage error
+    capsys.readouterr()
+    assert cli.main(["bench", "--smoke", "--targets", "pallas_interpret",
+                     "--build-root", root, "--diff", str(traj)]) == 2
+    capsys.readouterr()
+
+
+def test_checked_in_bench_trajectory_matches_corpus_surface():
+    """The committed BENCH_cpu_xla.json must track the live corpus: every
+    benched (primitive, ctype) pair with >1 valid cpu_xla candidate appears,
+    with the candidate indices the corpus declares today."""
+    import json
+    import pathlib
+
+    from repro.core.cli import _repo_root
+    from repro.core.corpus import load_corpus
+    from repro.core.select import valid_candidates
+
+    traj_path = _repo_root() / "BENCH_cpu_xla.json"
+    assert traj_path.exists(), "run: python -m repro.core bench " \
+                               "--targets cpu_xla --report"
+    traj = json.loads(traj_path.read_text())
+    assert traj["smoke"] is False        # trajectory is a REAL measurement
+    corpus = load_corpus(())
+    hw = set(traj["hardware_flags"])
+    for name, prim in corpus.primitives.items():
+        if prim.bench is None:
+            continue
+        for ctype in corpus.targets["cpu_xla"].ctypes:
+            cands = valid_candidates(prim, "cpu_xla", ctype, hw)
+            if len(cands) < 2:
+                continue
+            key = f"{name}/{ctype}"
+            assert key in traj["winners"], key
+            assert traj["winners"][key]["candidates"] == \
+                [prim.definitions.index(c) for c in cands], key
+
+
+# -- shared store root (many processes, one directory) --------------------------
+
+
+def test_shared_commit_publishes_by_rename(tmp_path):
+    """Shared-mode commit stages privately and publishes atomically: a second
+    writer racing the same name loses the rename and adopts the winner."""
+    from dataclasses import dataclass
+
+    from repro.core.cache import ArtifactCache, CacheKey
+
+    @dataclass
+    class F:
+        relpath: str
+        content: str
+
+    key = CacheKey("fp", "cpu_xla", ("avx2",), "2.0.0", "v")
+    ns = key.hw_namespace()
+    a = ArtifactCache(tmp_path, shared=True, namespace=ns)
+    b = ArtifactCache(tmp_path, shared=True, namespace=ns)
+    d1 = a.commit("pkg_x", key, [F("m.py", "WINNER = 1\n")])
+    d2 = b.commit("pkg_x", key, [F("m.py", "WINNER = 2\n")])
+    assert d1 == d2
+    assert (d1 / "m.py").read_text() == "WINNER = 1\n"   # first publish wins
+    assert a.lookup("pkg_x") is not None
+    # no staging litter survives
+    leftovers = [p for p in a.package_root.iterdir()
+                 if p.name.startswith(".")]
+    assert leftovers == []
+    # namespace isolation: a different hardware class sees nothing
+    other = ArtifactCache(tmp_path, shared=True, namespace="hw_other")
+    assert other.lookup("pkg_x") is None
+
+
+def test_shared_writer_election_and_wait(tmp_path):
+    from repro.core.cache import ArtifactCache
+
+    store = ArtifactCache(tmp_path, shared=True, namespace="hw_t")
+    assert store.acquire_writer("p") is True
+    assert store.acquire_writer("p") is False      # held
+    store.release_writer("p")
+    assert store.acquire_writer("p") is True       # released -> retaken
+    # a stale lock (crashed writer) is broken and retaken
+    lock = store._lock_path("q")
+    store._lock_root.mkdir(parents=True, exist_ok=True)
+    lock.write_text("999999")
+    import os
+
+    old = 10_000.0
+    os.utime(lock, (os.stat(lock).st_atime - old,
+                    os.stat(lock).st_mtime - old))
+    assert store.acquire_writer("q", stale_s=600.0) is True
+    # wait_for with no lock and no package returns promptly (writer failed)
+    assert store.wait_for("never", timeout_s=1.0) is None
+
+
+def test_shared_store_race_one_writer_one_warm_hit(tmp_path):
+    """Two PROCESSES generating the same artifact key against one shared
+    store root: exactly one runs the generator, the other takes the warm hit
+    (zero GPOs re-run) — the fleet warm-path acceptance criterion."""
+    import os
+    import subprocess
+    import sys
+    import textwrap as tw
+
+    worker = tmp_path / "worker.py"
+    worker.write_text(tw.dedent("""
+        import sys
+        from repro.core import GenConfig
+        from repro.core.library import generate_library
+
+        pkg_dir, result = generate_library(
+            GenConfig(target="cpu_xla", emit_tests=False, emit_build=True))
+        print("GENERATED" if result is not None else "WARM")
+        print(pkg_dir)
+    """))
+    import pathlib
+
+    import repro.core
+
+    src = str(pathlib.Path(repro.core.__file__).resolve().parents[2])
+    env = dict(os.environ)
+    env["TSL_STORE_ROOT"] = str(tmp_path / "store")
+    env["PYTHONPATH"] = os.pathsep.join(
+        [src] + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    procs = [subprocess.Popen([sys.executable, str(worker)], env=env,
+                              stdout=subprocess.PIPE, text=True)
+             for _ in range(2)]
+    outs = [p.communicate(timeout=600)[0].split() for p in procs]
+    assert all(p.returncode == 0 for p in procs)
+    marks = sorted(o[0] for o in outs)
+    assert marks == ["GENERATED", "WARM"], outs
+    assert outs[0][1] == outs[1][1]              # same published package dir
+    # the published package lives under the hardware-key namespace
+    store_root = tmp_path / "store" / "pkg"
+    spaces = [d.name for d in store_root.iterdir()]
+    assert len(spaces) == 1 and spaces[0].startswith("hw_")

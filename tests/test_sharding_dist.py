@@ -92,3 +92,73 @@ def test_logical_constraint_noop_without_mesh():
     x = jnp.zeros((4, 8))
     y = sharding.logical_constraint(x, "batch", None)
     assert y.shape == x.shape
+
+def test_output_projection_flip_list_complete():
+    """Every declared output-side projection name flips to (model, data) —
+    the whole list, not just wo (rules untested since PR 1)."""
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    params = {name: _sds((4096, 4096)) for name in sharding._OUTPUT_PROJ_NAMES}
+    params["wq"] = _sds((4096, 4096))
+    specs = sharding.param_specs(mesh, params)
+    for name in sharding._OUTPUT_PROJ_NAMES:
+        assert specs[name] == P("model", "data"), name
+    assert specs["wq"] == P("data", "model")     # input-side: NOT flipped
+
+
+def test_guard_falls_back_on_missing_axis_name():
+    """A mesh WITHOUT a model axis is a degenerate axis group of size 1: the
+    rules written for (data, model) must unshard those dims, not error."""
+    mesh = _FakeMesh((8,), ("data",))
+    params = {"wq": _sds((4096, 4096)), "wo": _sds((4096, 4096))}
+    specs = sharding.param_specs(mesh, params)
+    assert specs["wq"] == P("data", None)
+    assert specs["wo"] == P(None, "data")
+    state = {"k": _sds((4, 16, 8, 4096, 128))}
+    assert sharding.state_specs(mesh, state)["k"] == \
+        P(None, "data", None, None, None)
+
+
+def test_guard_falls_back_on_size1_axis_group():
+    """An axis the mesh carries at size 1 must also unshard (device_put with
+    a size-1 entry is legal but noisy; the guard folds it to None)."""
+    mesh = _FakeMesh((4, 1), ("data", "model"))
+    params = {"wq": _sds((4096, 4096))}
+    assert sharding.param_specs(mesh, params)["wq"] == P("data", None)
+    mesh2 = _FakeMesh((1, 4), ("data", "model"))
+    assert sharding.param_specs(mesh2, params)["wq"] == P(None, "model")
+
+
+def test_mesh_size_helpers():
+    assert sharding.dp_size(None) == 1 and sharding.tp_size(None) == 1
+    mesh = _FakeMesh((2, 4), ("data", "model"))
+    assert sharding.dp_size(mesh) == 2
+    assert sharding.tp_size(mesh) == 4
+    assert sharding.mesh_shards(mesh) == 8
+    pod = _FakeMesh((2, 8, 4), ("pod", "data", "model"))
+    assert sharding.dp_size(pod) == 16           # pod folds into DP
+    assert sharding.mesh_axis_sizes(pod) == {"pod": 2, "data": 8, "model": 4}
+
+
+def test_state_specs_token_axes_contract():
+    """Family-declared token axes override the largest-dim heuristic: a
+    recurrent leaf (token axis None) must NOT put a feature axis on model —
+    sharded-reduction reassociation there breaks decode equivalence."""
+    mesh = _FakeMesh((2, 4), ("data", "model"))
+    state = {"k": _sds((2, 4, 4, 64, 16)),       # KV cache: token axis 3
+             "s": _sds((2, 4, 4, 16, 16))}       # wkv state: NO token axis
+    heur = sharding.state_specs(mesh, state)
+    assert heur["s"] == P(None, "data", None, "model", None)  # heuristic: wrong
+    specs = sharding.state_specs(mesh, state,
+                                 token_axes={"k": 3, "s": None})
+    assert specs["k"] == P(None, "data", None, "model", None)
+    assert specs["s"] == P(None, "data", None, None, None)
+
+
+def test_state_specs_batch_axes_contract():
+    """Grouped-scan leaves (zamba h/conv) carry the request axis at 2 — the
+    declared batch axis takes the data entry, not the default axis 1."""
+    mesh = _FakeMesh((2, 4), ("data", "model"))
+    state = {"h": _sds((2, 3, 4, 8, 8, 16))}
+    specs = sharding.state_specs(mesh, state, token_axes={"h": None},
+                                 batch_axes={"h": 2})
+    assert specs["h"] == P(None, None, "data", None, None, None)
